@@ -1,0 +1,112 @@
+"""Benchmarks for paper Experiments B (Figure 5) and C (Figure 6)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bgq import partition_bisection_links
+from repro.core.strassen import caps_comm_model, strassen_winograd
+
+
+def fig5_matmul() -> Tuple[List[dict], str]:
+    """Figure 5: Strassen-Winograd matmul on Mira partitions.
+
+    (a) the compute kernel: depth-2 Strassen-Winograd in JAX validated
+        against jnp.dot (the per-node kernel of CAPS);
+    (b) the partition-aware comm model: predicted comm-time ratios between
+        current and proposed geometries must land in the paper's measured
+        x1.37–x1.52 band, wallclock in x1.08–x1.22.
+    """
+    # (a) kernel correctness + timing
+    key = jax.random.key(0)
+    ka, kb = jax.random.split(key)
+    n = 512
+    a = jax.random.normal(ka, (n, n), jnp.float32)
+    b = jax.random.normal(kb, (n, n), jnp.float32)
+    fast = jax.jit(lambda x, y: strassen_winograd(x, y, depth=2))
+    ref = jax.jit(jnp.dot)
+    out = fast(a, b)
+    err = float(jnp.abs(out - ref(a, b)).max() / jnp.abs(ref(a, b)).max())
+    assert err < 1e-4, err
+    for f in (fast, ref):
+        f(a, b).block_until_ready()
+    t0 = time.perf_counter(); fast(a, b).block_until_ready(); t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter(); ref(a, b).block_until_ready(); t_ref = time.perf_counter() - t0
+
+    # (b) comm model on the paper's four Mira cells
+    cells = [
+        (4, partition_bisection_links((4, 1, 1, 1)), partition_bisection_links((2, 2, 1, 1))),
+        (8, partition_bisection_links((4, 2, 1, 1)), partition_bisection_links((2, 2, 2, 1))),
+        (16, partition_bisection_links((4, 4, 1, 1)), partition_bisection_links((2, 2, 2, 2))),
+        (24, partition_bisection_links((4, 3, 2, 1)), partition_bisection_links((3, 2, 2, 2))),
+    ]
+    # comm_over_comp=0.5: the paper reports comm ~ half of compute after
+    # communication-hiding ("costs offset by communication-hiding are not
+    # presented"), which is exactly what the wallclock band 1.08-1.22 vs the
+    # comm band 1.37-1.52 implies: (C + 0.5*1.45*C)/(C + 0.5*C) = 1.15.
+    preds = caps_comm_model(cells, phi=0.45, comm_over_comp=0.5)
+    rows = []
+    for p in preds:
+        rows.append(
+            {
+                "midplanes": p.midplanes,
+                "bisection_ratio": round(p.bisection_ratio, 3),
+                "pred_comm_ratio": round(p.comm_ratio, 3),
+                "pred_wallclock_ratio": round(p.wallclock_ratio, 3),
+                "paper_comm_band": "[1.37, 1.52]",
+                "paper_wallclock_band": "[1.08, 1.22]",
+            }
+        )
+    for p in preds[:3]:  # the x2-bisection cells
+        assert 1.37 <= p.comm_ratio <= 1.52
+        assert 1.08 <= p.wallclock_ratio <= 1.22
+    rows.append(
+        {
+            "midplanes": "kernel",
+            "bisection_ratio": f"strassen_err={err:.2e}",
+            "pred_comm_ratio": f"t_strassen_ms={t_fast*1e3:.1f}",
+            "pred_wallclock_ratio": f"t_dot_ms={t_ref*1e3:.1f}",
+            "paper_comm_band": "",
+            "paper_wallclock_band": "",
+        }
+    )
+    return rows, f"comm_ratio_x2cells={preds[0].comm_ratio:.2f},kernel_err={err:.1e}"
+
+
+def fig6_strong_scaling() -> Tuple[List[dict], str]:
+    """Figure 6: strong-scaling simulation (2 -> 4 -> 8 midplanes, n=9408).
+
+    Bisection-bound comm with fixed total cross-volume: proposed geometries
+    scale linearly (T ~ 1/BW doubles each doubling); the current geometries
+    stall between 2 and 4 midplanes — the paper's 'false sub-linear scaling'
+    hazard for scaling studies."""
+    cells = [
+        (2, (2, 1, 1, 1), (2, 1, 1, 1)),
+        (4, (4, 1, 1, 1), (2, 2, 1, 1)),
+        (8, (4, 2, 1, 1), (2, 2, 2, 1)),
+    ]
+    rows = []
+    base_bw = 2.0 * partition_bisection_links((2, 1, 1, 1))
+    for mp, cur, prop in cells:
+        bw_c = 2.0 * partition_bisection_links(cur)
+        bw_p = 2.0 * partition_bisection_links(prop)
+        rows.append(
+            {
+                "midplanes": mp,
+                "current_geometry": cur,
+                "proposed_geometry": prop,
+                "comm_time_current": round(base_bw / bw_c, 3),  # normalized to 2mp
+                "comm_time_proposed": round(base_bw / bw_p, 3),
+            }
+        )
+    # proposed: linear scaling 2 -> 8 (4x less comm time at 4x nodes)
+    assert rows[0]["comm_time_proposed"] / rows[2]["comm_time_proposed"] == 4.0
+    # current: stalls at 4 midplanes (same bisection as 2)
+    assert rows[0]["comm_time_current"] == rows[1]["comm_time_current"]
+    assert rows[0]["comm_time_current"] / rows[2]["comm_time_current"] == 2.0
+    return rows, "proposed=linear(4x),current=sublinear(2x)"

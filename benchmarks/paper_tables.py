@@ -1,0 +1,169 @@
+"""Benchmarks reproducing the paper's tables and figures.
+
+One function per table/figure; each returns (rows, derived) where derived is
+a short scalar summary asserted against the paper's published numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core.bgq import (
+    JUQUEEN,
+    JUQUEEN48,
+    JUQUEEN54,
+    MIRA,
+    SEQUOIA,
+    juqueen_partition_table,
+    machine_design_table,
+    mira_partition_table,
+    node_dims_of_midplane_geometry,
+    partition_bisection_links,
+)
+from repro.core.contention import pairing_speedup, predict_pairing_time
+from repro.core.collectives import TorusFabric, best_slice_geometry, worst_slice_geometry
+
+
+def table1_6_mira() -> Tuple[List[dict], str]:
+    """Tables 1 & 6 / Figure 1: Mira current vs proposed partition bisection."""
+    rows = mira_partition_table()
+    improved = [r for r in rows if r["proposed_bw"]]
+    gains = [r["proposed_bw"] / r["current_bw"] for r in improved]
+    assert len(improved) == 4 and max(gains) == 2.0
+    return rows, f"improved_rows={len(improved)},max_gain={max(gains):.2f}"
+
+
+def table2_7_juqueen() -> Tuple[List[dict], str]:
+    """Tables 2 & 7 / Figure 2: JUQUEEN worst vs best partition bisection."""
+    rows = juqueen_partition_table()
+    improved = [r for r in rows if r["best_bw"]]
+    assert len(improved) == 6
+    assert all(r["best_bw"] / r["worst_bw"] == 2.0 for r in improved)
+    # the 'spiking' ring-shaped sizes (5, 7 midplanes) have BW 256
+    spikes = [r for r in rows if r["midplanes"] in (5, 7)]
+    assert all(r["worst_bw"] == 256 for r in spikes)
+    return rows, f"improved_rows={len(improved)},gain=2.00"
+
+
+def table5_machine_design() -> Tuple[List[dict], str]:
+    """Table 5 / Figure 7: hypothetical JUQUEEN-54 / JUQUEEN-48 machines."""
+    rows = machine_design_table()
+    r48 = next(r for r in rows if r["midplanes"] == 48)
+    r54 = next(r for r in rows if r["midplanes"] == 54)
+    r56 = next(r for r in rows if r["midplanes"] == 56)
+    # J-48 beats JUQUEEN at 48 midplanes by 1.5x; J-54 tops at 4608
+    assert r48["j48_bw"] / r48["juqueen_bw"] == 1.5
+    assert r54["j54_bw"] == 4608
+    max_speedup = r54["j54_bw"] / r56["juqueen_bw"]
+    return rows, f"j54_max_gain={max_speedup:.2f},j48_gain_at48={1.5}"
+
+
+# Paper Figure 3/4 experimental observations (avg seconds for all rounds).
+# Values transcribed from the figures' reported speedup factors.
+MIRA_PAIRING_CELLS = [  # (midplanes, current geom, proposed geom, observed factor)
+    (4, (4, 1, 1, 1), (2, 2, 1, 1), 1.96),
+    (8, (4, 2, 1, 1), (2, 2, 2, 1), 1.92),
+    (16, (4, 4, 1, 1), (2, 2, 2, 2), 1.95),
+    (24, (4, 3, 2, 1), (3, 2, 2, 2), 1.44),
+]
+JUQUEEN_PAIRING_CELLS = [
+    (4, (4, 1, 1, 1), (2, 2, 1, 1), 1.92),
+    (6, (6, 1, 1, 1), (3, 2, 1, 1), 1.95),
+    (8, (4, 2, 1, 1), (2, 2, 2, 1), 1.93),
+    (12, (6, 2, 1, 1), (3, 2, 2, 1), 1.94),
+]
+
+MESSAGE_GB = 0.1342e9
+LINK_BW = 2.0e9  # GB/s per direction (Chen et al. 2012)
+ROUNDS = 26
+
+
+def _pairing_rows(cells) -> List[dict]:
+    rows = []
+    for mp, cur, prop, observed in cells:
+        pred_cur = predict_pairing_time(node_dims_of_midplane_geometry(cur), MESSAGE_GB, LINK_BW)
+        pred_prop = predict_pairing_time(node_dims_of_midplane_geometry(prop), MESSAGE_GB, LINK_BW)
+        t_cur = pred_cur.time_per_volume * MESSAGE_GB * ROUNDS
+        t_prop = pred_prop.time_per_volume * MESSAGE_GB * ROUNDS
+        rows.append(
+            {
+                "midplanes": mp,
+                "current": cur,
+                "proposed": prop,
+                "pred_time_current_s": round(t_cur, 2),
+                "pred_time_proposed_s": round(t_prop, 2),
+                "pred_speedup": round(t_cur / t_prop, 3),
+                "observed_speedup": observed,
+            }
+        )
+    return rows
+
+
+def fig3_pairing_mira() -> Tuple[List[dict], str]:
+    """Figure 3: bisection-pairing on Mira — predicted vs observed speedups."""
+    rows = _pairing_rows(MIRA_PAIRING_CELLS)
+    # 4/8/16 midplanes: predicted exactly 2.0, observed >= 1.92
+    for r in rows[:3]:
+        assert r["pred_speedup"] == 2.0 and r["observed_speedup"] >= 1.92
+    # 24 midplanes: geometry-only prediction is 4/3; the paper's quoted 1.50
+    # is the 16->24 node-count scaling at constant bisection (checked below)
+    assert rows[3]["pred_speedup"] == round(4 / 3, 3)
+    t16 = 16 * 512 / (2.0 * partition_bisection_links((2, 2, 2, 2)))
+    t24 = 24 * 512 / (2.0 * partition_bisection_links((3, 2, 2, 2)))
+    assert round(t24 / t16, 2) == 1.50
+    err = max(abs(r["pred_speedup"] - r["observed_speedup"]) / r["pred_speedup"] for r in rows[:3])
+    return rows, f"max_rel_err_vs_observed={err:.3f}"
+
+
+def fig4_pairing_juqueen() -> Tuple[List[dict], str]:
+    """Figure 4: bisection-pairing on JUQUEEN (worst vs best geometries)."""
+    rows = _pairing_rows(JUQUEEN_PAIRING_CELLS)
+    for r in rows:
+        assert r["pred_speedup"] == 2.0 and r["observed_speedup"] >= 1.92
+    # Fig 4 caption: per-node bisection identical for 4 & 8 mp, 50% worse for 6
+    t4 = predict_pairing_time(node_dims_of_midplane_geometry((4, 1, 1, 1)), 1, 1)
+    t6 = predict_pairing_time(node_dims_of_midplane_geometry((6, 1, 1, 1)), 1, 1)
+    t8 = predict_pairing_time(node_dims_of_midplane_geometry((4, 2, 1, 1)), 1, 1)
+    assert t4.time_per_volume == t8.time_per_volume
+    assert abs(t6.time_per_volume / t4.time_per_volume - 1.5) < 1e-9
+    return rows, "all_cells_pred=2.00,observed>=1.92"
+
+
+def tpu_slice_geometry() -> Tuple[List[dict], str]:
+    """Beyond-paper: the same analysis on a TPU v5e pod (16x16, wrap-on-full-
+    dim semantics) and a v4-style 3D pod — the hardware adaptation table."""
+    rows = []
+    pod2d = TorusFabric((16, 16), (True, True))
+    for chips in (8, 16, 32, 64, 128):
+        best = best_slice_geometry(pod2d, chips)
+        worst = worst_slice_geometry(pod2d, chips)
+        rows.append(
+            {
+                "pod": "v5e-16x16",
+                "chips": chips,
+                "best_geometry": best[0],
+                "best_bisection": best[1],
+                "worst_geometry": worst[0],
+                "worst_bisection": worst[1],
+                "gain": best[1] / max(worst[1], 1),
+            }
+        )
+    pod3d = TorusFabric((16, 16, 8), (True, True, True))
+    for chips in (64, 128, 256, 512):
+        best = best_slice_geometry(pod3d, chips)
+        worst = worst_slice_geometry(pod3d, chips)
+        rows.append(
+            {
+                "pod": "v4-16x16x8",
+                "chips": chips,
+                "best_geometry": best[0],
+                "best_bisection": best[1],
+                "worst_geometry": worst[0],
+                "worst_bisection": worst[1],
+                "gain": best[1] / max(worst[1], 1),
+            }
+        )
+    max_gain = max(r["gain"] for r in rows)
+    assert max_gain >= 2.0  # the paper's x2 appears on TPU fabrics too
+    return rows, f"max_gain={max_gain:.2f}"

@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run JSON
+cache.  Usage: PYTHONPATH=src python -m benchmarks.render_experiments > out.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline_report import load_records
+
+HW = "TPU v5e-class: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.1f}"
+
+
+def dryrun_section() -> str:
+    recs = load_records()
+    lines = [
+        "### Dry-run matrix (lower + compile, ShapeDtypeStruct inputs, no allocation)",
+        "",
+        "| arch | shape | mesh | chips | compile s | state GB/dev | XLA temp GB/dev | collectives (prod schedule) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        coll = r.get("production_collectives", {})
+        sched = ", ".join(
+            f"{k.replace('collective-','c-')}:{int(v['count'])}"
+            for k, v in coll.items()
+            if v["count"]
+        )
+        mem = r.get("memory_analysis", {})
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {chips} | {cs} | {state} | {temp} | {sched} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"], chips=r["chips"],
+                cs=r.get("compile_seconds", "-"),
+                state=fmt_bytes(r.get("bytes_per_device")),
+                temp=fmt_bytes(mem.get("temp_size_in_bytes")),
+                sched=sched or "-",
+            )
+        )
+    n = len(recs)
+    lines.append("")
+    lines.append(f"{n} cells compiled OK (per-cell JSON in benchmarks/results/dryrun/).")
+    return "\n".join(lines)
+
+
+def roofline_section(mesh: str = "single") -> str:
+    recs = load_records(mesh)
+    lines = [
+        f"### Roofline table — single-pod 16x16 mesh ({HW})",
+        "",
+        "| arch | shape | compute s | memory s | collective s | bottleneck | MODEL/HLO flops | roofline fraction | 1-line lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    LEVER = {
+        "collective": "cut FSDP gather/grad traffic (bf16 reductions, better dW strategy, axis rings)",
+        "memory": "fuse/stream the cache + logits traffic; bigger per-chip batch",
+        "compute": "close the remat + masked-attention waste (flash kernel path)",
+    }
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            "| {a} | {s} | {c:.3f} | {m:.3f} | {k:.3f} | {b} | {u:.2f} | {f:.4f} | {lev} |".format(
+                a=r["arch"], s=r["shape"], c=r["compute_term"], m=r["memory_term"],
+                k=r["collective_term"], b=r["bottleneck"],
+                u=r["useful_flops_ratio"], f=r["roofline_fraction"],
+                lev=LEVER.get(r["bottleneck"], ""),
+            )
+        )
+    return "\n".join(lines)
+
+
+def main():
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+
+
+if __name__ == "__main__":
+    main()

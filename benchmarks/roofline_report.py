@@ -1,0 +1,68 @@
+"""Roofline report: reads the dry-run JSON cache and prints the per-cell
+three-term table (EXPERIMENTS.md §Roofline is generated from this)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_records(mesh: Optional[str] = None, include_variants: bool = False) -> List[dict]:
+    recs = []
+    if not RESULTS_DIR.exists():
+        return recs
+    for f in sorted(RESULTS_DIR.glob("*.json")):
+        if not include_variants and f.stem.count("__") > 2:
+            continue  # perf-iteration variants (arch__shape__mesh__tag)
+        r = json.loads(f.read_text())
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def roofline_table(mesh: str = "single") -> Tuple[List[dict], str]:
+    """§Roofline: all three terms per (arch x shape), single-pod mesh."""
+    recs = load_records(mesh)
+    rows = []
+    for r in recs:
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "compute_s": round(r["compute_term"], 4),
+                "memory_s": round(r["memory_term"], 4),
+                "collective_s": round(r["collective_term"], 4),
+                "bottleneck": r["bottleneck"],
+                "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+                "roofline_fraction": round(r["roofline_fraction"], 4),
+                "hbm_per_device_gb": round((r.get("bytes_per_device") or 0) / 1e9, 2),
+            }
+        )
+    if not rows:
+        return rows, "no dry-run records (run python -m repro.launch.dryrun --all)"
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    bnecks = {}
+    for r in rows:
+        bnecks[r["bottleneck"]] = bnecks.get(r["bottleneck"], 0) + 1
+    return rows, f"cells={len(rows)},bottlenecks={bnecks},worst={worst['arch']}/{worst['shape']}"
+
+
+def dryrun_matrix() -> Tuple[List[dict], str]:
+    """§Dry-run: compile status for every (arch x shape x mesh) cell."""
+    recs = load_records()
+    rows = [
+        {
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": r["mesh"],
+            "chips": r["chips"],
+            "compile_s": r.get("compile_seconds"),
+            "ok": r.get("ok", False),
+        }
+        for r in recs
+    ]
+    n_ok = sum(1 for r in rows if r["ok"])
+    return rows, f"compiled={n_ok}/{len(rows)}"

@@ -1,0 +1,64 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark), then the
+full row dumps.  Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.paper_tables import (
+    fig3_pairing_mira,
+    fig4_pairing_juqueen,
+    table1_6_mira,
+    table2_7_juqueen,
+    table5_machine_design,
+    tpu_slice_geometry,
+)
+from benchmarks.matmul_scaling import fig5_matmul, fig6_strong_scaling
+from benchmarks.roofline_report import dryrun_matrix, roofline_table
+
+BENCHMARKS = [
+    ("table1_6_mira", table1_6_mira),
+    ("table2_7_juqueen", table2_7_juqueen),
+    ("table5_machine_design", table5_machine_design),
+    ("fig3_pairing_mira", fig3_pairing_mira),
+    ("fig4_pairing_juqueen", fig4_pairing_juqueen),
+    ("fig5_matmul", fig5_matmul),
+    ("fig6_strong_scaling", fig6_strong_scaling),
+    ("tpu_slice_geometry", tpu_slice_geometry),
+    ("roofline_table", roofline_table),
+    ("dryrun_matrix", dryrun_matrix),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    details = []
+    failed = []
+    for name, fn in BENCHMARKS:
+        try:
+            t0 = time.perf_counter()
+            rows, derived = fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt:.0f},{derived}")
+            details.append((name, rows))
+        except Exception as e:
+            failed.append(name)
+            print(f"{name},FAILED,{e!r}")
+            traceback.print_exc(file=sys.stderr)
+    print()
+    for name, rows in details:
+        print(f"== {name} ==")
+        for r in rows:
+            print("  ", r)
+        print()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

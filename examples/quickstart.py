@@ -1,0 +1,14 @@
+"""Quickstart: train a reduced LM for 60 steps and watch the loss drop.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    first, last = train_main(
+        ["--arch", "granite-3-8b", "--steps", "60", "--batch", "8",
+         "--seq", "64", "--lr", "3e-3", "--log-every", "10"]
+    )
+    assert last < first, "loss did not decrease"
+    print(f"quickstart OK: {first:.3f} -> {last:.3f}")

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + greedy decode on a reduced model.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    tps = serve_main(["--arch", "granite-3-8b", "--requests", "8",
+                      "--prompt-len", "16", "--gen-len", "24"])
+    assert tps > 0
+    print("serve example OK")

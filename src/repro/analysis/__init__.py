@@ -1,0 +1,6 @@
+from . import analytic, roofline
+from .axis_attribution import (
+    per_axis_collectives,
+    contention_aware_collective_term,
+    classify_axis,
+)

@@ -1,0 +1,157 @@
+"""Attribute compiled-HLO collectives to logical mesh axes, and price them
+with the paper's contention model.
+
+The SPMD partitioner tags every collective with ``replica_groups``.  For a
+row-major device mesh (pod, data, model) the *minor* axis ("model") forms
+contiguous groups (stride 1), "data" strides by |model|, and "pod" by
+|data|*|model|.  XLA emits groups either as an explicit list
+(``{{0,1,...},{...}}``) or in iota form (``[G,N]<=[A,B,...]T(perm)``); both
+are parsed here and classified by (group size, stride).
+
+The contention-aware collective term then prices each axis with its physical
+embedding (launch/mesh.plan_axes): wrapped ICI ring (2 directions x 50 GB/s),
+chain (1x), or the cross-pod DCI (12.5 GB/s) — this is where the paper's
+geometry/assignment analysis enters the roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .roofline import _OP_RE, _type_bytes, LINK_BW
+
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_signature(line: str) -> Optional[Tuple[int, int]]:
+    """(group_size, stride) of the first replica group, if parseable."""
+    m = _IOTA_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")] if m.group(4) else list(range(len(dims)))
+        # devices = iota(prod(dims)).reshape(dims).transpose(perm).reshape(G, N)
+        # stride of consecutive members in a group = stride of the last
+        # transposed dimension in the original layout.
+        strides = [1] * len(dims)
+        for i in range(len(dims) - 2, -1, -1):
+            strides[i] = strides[i + 1] * dims[i + 1]
+        last_dim = perm[-1]
+        return group_size, strides[last_dim]
+    m = _LIST_RE.search(line)
+    if m:
+        members = [int(x) for x in m.group(1).split(",")]
+        if len(members) < 2:
+            return len(members), 1
+        return len(members), members[1] - members[0]
+    return None
+
+
+def classify_axis(
+    group_size: int, stride: int, mesh_shape: Dict[str, int]
+) -> str:
+    """Map (group size, stride) to a mesh axis (or axis product) name."""
+    names = list(mesh_shape)
+    sizes = [mesh_shape[n] for n in names]
+    # minor-to-major strides in a row-major mesh
+    strides = {}
+    acc = 1
+    for n in reversed(names):
+        strides[n] = acc
+        acc *= mesh_shape[n]
+    for n in names:
+        if group_size == mesh_shape[n] and stride == strides[n]:
+            return n
+    # axis products (e.g. ("pod","data") fsdp groups)
+    for i in range(len(names)):
+        for j in range(i + 1, len(names) + 1):
+            prod = 1
+            for n in names[i:j]:
+                prod *= mesh_shape[n]
+            if group_size == prod and stride in (strides[names[j - 1]], 1):
+                return "+".join(names[i:j])
+    if group_size == acc:
+        return "ALL"
+    return f"unknown({group_size},{stride})"
+
+
+def per_axis_collectives(
+    hlo_text: str, mesh_shape: Dict[str, int]
+) -> Dict[str, Dict[str, float]]:
+    """axis -> {bytes, count} summed over all collective ops."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        sig = _group_signature(line)
+        axis = classify_axis(sig[0], sig[1], mesh_shape) if sig else "unknown"
+        b = _type_bytes(m.group(1))
+        slot = out.setdefault(axis, {"bytes": 0.0, "count": 0})
+        slot["bytes"] += b
+        slot["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Contention-aware pricing (the paper's model applied to the roofline)
+# ---------------------------------------------------------------------------
+DCI_BW = 12.5e9  # cross-pod per-chip share
+
+
+@dataclass(frozen=True)
+class AxisBandwidth:
+    name: str
+    effective_bw: float  # bytes/s available to one chip's collective stream
+    why: str
+
+
+def axis_bandwidths(
+    mesh_shape: Dict[str, int], model_gets_best_rings: bool = True
+) -> Dict[str, AxisBandwidth]:
+    """Physical bandwidth per logical axis under an assignment plan.
+
+    Paper-faithful planning (`model_gets_best_rings=True`) gives the
+    heavy-traffic "model" axis the wrapped contiguous ICI rings (2 x LINK_BW)
+    and "data" the second dimension's rings (also wrapped on a full pod).
+    The naive plan (False) models an allocator that hands "model" a strided /
+    chain embedding: half the effective bandwidth — the TPU analogue of the
+    paper's elongated-partition penalty.
+    """
+    out = {}
+    for name in mesh_shape:
+        if name == "pod":
+            out[name] = AxisBandwidth(name, DCI_BW, "cross-pod DCI")
+        elif name == "model":
+            bw = 2 * LINK_BW if model_gets_best_rings else LINK_BW
+            out[name] = AxisBandwidth(
+                name, bw, "wrapped ICI ring" if model_gets_best_rings else "chain/strided embedding"
+            )
+        else:
+            out[name] = AxisBandwidth(name, 2 * LINK_BW, "wrapped ICI ring")
+    return out
+
+
+def contention_aware_collective_term(
+    per_axis: Dict[str, Dict[str, float]],
+    mesh_shape: Dict[str, int],
+    model_gets_best_rings: bool = True,
+) -> Tuple[float, Dict[str, float]]:
+    """Seconds per step, per-device, pricing each axis with its embedding."""
+    bws = axis_bandwidths(mesh_shape, model_gets_best_rings)
+    per_axis_time = {}
+    for axis, stat in per_axis.items():
+        parts = axis.split("+")
+        # an axis-product collective (fsdp groups) is bottlenecked by its
+        # slowest member; 'ALL'/'unknown' get the conservative single link
+        if axis == "ALL" or axis.startswith("unknown"):
+            bw = LINK_BW
+        else:
+            bw = min(bws[p].effective_bw for p in parts if p in bws) if all(
+                p in bws for p in parts
+            ) else LINK_BW
+        per_axis_time[axis] = stat["bytes"] / bw
+    return sum(per_axis_time.values()), per_axis_time

@@ -1,0 +1,60 @@
+"""repro.core — Network Partitioning and Avoidable Contention (Oltchik &
+Schwartz, 2020) as a composable library.
+
+Layers:
+  torus / isoperimetry  — the edge-isoperimetric analysis (Theorem 3.1).
+  bgq                   — Blue Gene/Q machine models (paper reproduction).
+  contention            — link-level DOR routing / contention predictions.
+  collectives           — TPU-adapted collective cost model + axis assignment.
+  allocation            — partition allocation policies and queue simulator.
+  topology              — hypercube / HyperX / Dragonfly (paper Section 5).
+"""
+
+from .torus import Torus, canonical, volume, factorizations
+from .isoperimetry import (
+    bollobas_leader_bound,
+    theorem31_bound,
+    lemma32_cut,
+    optimal_cuboid,
+    worst_cuboid,
+    small_set_expansion,
+)
+from .bgq import (
+    MIRA,
+    JUQUEEN,
+    SEQUOIA,
+    JUQUEEN48,
+    JUQUEEN54,
+    MACHINES,
+    BlueGeneQ,
+    partition_bisection_links,
+    mira_partition_table,
+    juqueen_partition_table,
+    machine_design_table,
+)
+from .contention import (
+    LinkLoads,
+    predict_pairing_time,
+    pairing_speedup,
+    uniform_offset_max_load,
+    furthest_offset,
+)
+from .collectives import (
+    TorusFabric,
+    slice_fabric,
+    best_slice_geometry,
+    worst_slice_geometry,
+    assign_axes,
+    CollectiveCostModel,
+    AxisEmbedding,
+)
+from .allocation import (
+    JobRequest,
+    MachineState,
+    ElongatedPolicy,
+    IsoperimetricPolicy,
+    ListPolicy,
+    HintedPolicy,
+    simulate_queue,
+    avoidable_contention_ratio,
+)

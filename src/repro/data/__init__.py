@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, DataPipeline, make_batch, host_slice

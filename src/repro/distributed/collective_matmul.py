@@ -1,0 +1,109 @@
+"""Collective matmul: overlap tensor-parallel communication with compute.
+
+GSPMD emits all-gather -> matmul sequentially; the classic "collective
+matmul" (Wang et al., ASPLOS'23) decomposes the gather into ring steps and
+overlaps each shard's matmul with the next shard's collective-permute.  On
+TPU the permute rides exactly the ICI rings the paper's axis planner
+assigns, so the overlap efficiency is the ring quality — wrapped contiguous
+rings (planned assignment) sustain 2 concurrent directions, strided/chain
+embeddings stall the pipeline (the TPU analogue of elongated partitions).
+
+Implemented with shard_map + jax.lax.ppermute:
+
+* ``allgather_matmul(x, w, axis)``  — y = allgather(x, axis) @ w, with x
+  sharded on its contracting rows and w sharded on the same rows; each ring
+  step matmuls the resident shard while permuting the next one.
+* ``matmul_reducescatter(x, w, axis)`` — y = reducescatter(x @ w) with w
+  sharded on columns: partial products are accumulated around the ring.
+
+Numerics are exact (same adds in a different order).  Tests validate on a
+1-device degenerate mesh and on an 8-device subprocess mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _ring_perm(axis_size: int, shift: int = 1):
+    return [(i, (i + shift) % axis_size) for i in range(axis_size)]
+
+
+def allgather_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
+    """y = (all-gather of x along `axis`) @ w.
+
+    x: (m_shard, k) sharded over rows on `axis`; w: (k, n) replicated.
+    Returns y: (m, n) fully gathered — but computed so each ring step's
+    ppermute overlaps the previous shard's matmul (no monolithic gather).
+    """
+    n_shards = mesh.shape[axis]
+
+    def body(x_blk, w_full):
+        idx = jax.lax.axis_index(axis)
+        # unrolled python loop: static ring schedule (n_shards steps); each
+        # ppermute is independent of the current step's matmul, so the
+        # scheduler overlaps them
+        blk = x_blk
+        results = []
+        for i in range(n_shards):
+            src = (idx - i) % n_shards
+            y_i = blk @ w_full  # compute current resident shard
+            results.append((src, y_i))
+            if i + 1 < n_shards:
+                blk = jax.lax.ppermute(blk, axis, _ring_perm(n_shards))
+        # place each partial into its row position
+        m_shard = x_blk.shape[0]
+        out = jnp.zeros((m_shard * n_shards, w_full.shape[1]), y_i.dtype)
+        for src, y_i in results:
+            out = jax.lax.dynamic_update_slice(
+                out, y_i, (src * m_shard, jnp.int32(0))
+            )
+        return out
+
+    spec_x = P(axis, None)
+    return shard_map(
+        body, mesh=mesh, in_specs=(spec_x, P(None, None)), out_specs=P(None, None),
+        check_rep=False,
+    )(x, w)
+
+
+def matmul_reducescatter(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
+    """y = reduce-scatter(x @ w) along `axis` rows of the output.
+
+    x: (m, k_shard) sharded on contracting dim; w: (k_shard, n) sharded on
+    rows.  Each rank accumulates its output shard by rotating partials
+    around the ring — each ppermute overlaps the next local matmul.
+    Returns y: (m_shard, n) sharded over rows on `axis`.
+    """
+    n_shards = mesh.shape[axis]
+
+    def body(x_blk, w_blk):
+        idx = jax.lax.axis_index(axis)
+        m = x_blk.shape[0]
+        m_shard = m // n_shards
+
+        def rows(b):
+            return jax.lax.dynamic_slice_in_dim(x_blk, b * m_shard, m_shard, 0)
+
+        # Ring reduce-scatter schedule: the accumulator that starts at rank s
+        # carries output block (s-1); after t hops rank r holds block
+        # (r - t - 1) and adds its own contribution; after n-1 hops rank r
+        # holds its own block r, fully reduced.  Each hop's ppermute overlaps
+        # the next local matmul.
+        acc = rows((idx - 1) % n_shards) @ w_blk
+        for t in range(1, n_shards):
+            acc = jax.lax.ppermute(acc, axis, _ring_perm(n_shards))
+            b = (idx - t - 1) % n_shards
+            acc = acc + rows(b) @ w_blk
+        return acc
+
+    return shard_map(
+        body, mesh=mesh, in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(axis, None), check_rep=False,
+    )(x, w)

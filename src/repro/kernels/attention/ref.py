@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, K, S, hd)
+    v: jax.Array,  # (B, K, S, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    k = jnp.repeat(k, H // K, axis=1)
+    v = jnp.repeat(v, H // K, axis=1)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32) * scale,
+        k.astype(jnp.float32),
+    )
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.full((S, S), True)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window is not None:
+        mask &= pos_q < pos_k + window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

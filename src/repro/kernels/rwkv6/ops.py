@@ -1,0 +1,29 @@
+"""Jitted wrapper for the RWKV6 chunked kernel ((B,S,H,P) model layout)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .chunked import rwkv6_chunked_hmajor
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_mix(
+    r: jax.Array,  # (B, S, H, P)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # (H, P)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    out, state = rwkv6_chunked_hmajor(
+        tr(r), tr(k), tr(v), tr(logw), u, chunk=chunk, interpret=interpret
+    )
+    return tr(out), state

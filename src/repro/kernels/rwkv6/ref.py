@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RWKV6 kernel: direct sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_reference(r, k, v, logw, u):
+    """Head-major oracle.  r,k,v,logw: (B,H,S,P); u: (H,P).
+    Returns (out (B,H,S,P) f32, final state (B,H,P,P) f32)."""
+    B, H, S, P = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lw = logw.astype(jnp.float32)
+    state0 = jnp.zeros((B, H, P, P), jnp.float32)
+
+    def step(state, t):
+        rt, kt, vt, wt = rf[:, :, t], kf[:, :, t], vf[:, :, t], jnp.exp(lw[:, :, t])
+        att = state + u[None, :, :, None] * kt[..., None] * vt[..., None, :]
+        ot = jnp.einsum("bhp,bhpo->bho", rt, att)
+        state = state * wt[..., None] + kt[..., None] * vt[..., None, :]
+        return state, ot
+
+    state, outs = jax.lax.scan(step, state0, jnp.arange(S))
+    return outs.transpose(1, 2, 0, 3), state

@@ -1,0 +1,30 @@
+"""Jitted wrapper for the SSD chunked kernel ((B,S,...) model layout)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .chunked import ssd_chunked_hmajor
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    xh: jax.Array,  # (B, S, H, P) raw head inputs
+    dt: jax.Array,  # (B, S, H) positive step sizes
+    A: jax.Array,  # (H,) negative decay rates
+    bm: jax.Array,  # (B, S, G, N)
+    cm: jax.Array,  # (B, S, G, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    xw = (xh * dt[..., None]).transpose(0, 2, 1, 3)  # (B,H,S,P)
+    la = (dt * A[None, None, :]).transpose(0, 2, 1)[..., None]  # (B,H,S,1)
+    bmh = bm.transpose(0, 2, 1, 3)  # (B,G,S,N)
+    cmh = cm.transpose(0, 2, 1, 3)
+    y, state = ssd_chunked_hmajor(xw, la, bmh, cmh, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3), state

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SSD kernel: direct sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(xw, la, bm, cm):
+    """Head-major oracle.  xw: (B,H,S,P); la: (B,H,S,1); bm/cm: (B,G,S,N).
+    Returns (y (B,H,S,P) f32, final state (B,H,N,P))."""
+    B, H, S, P = xw.shape
+    G, N = bm.shape[1], bm.shape[3]
+    bh = jnp.repeat(bm, H // G, axis=1)
+    ch = jnp.repeat(cm, H // G, axis=1)
+    xf = xw.astype(jnp.float32)
+    laf = la.astype(jnp.float32)[..., 0]
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(laf[:, :, t])  # (B,H)
+        h = h * a[..., None, None] + bh[:, :, t][..., None] * xf[:, :, t][:, :, None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ch[:, :, t], h)
+        return h, y
+
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    return ys.transpose(1, 2, 0, 3), state

@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + decode with continuous batching slots.
+
+CPU-scale with reduced configs; the production mesh path is exercised by
+the dry-run (decode_32k / long_500k cells lower ``decode_step``).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --reduced \
+      --requests 8 --prompt-len 16 --gen-len 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.train import make_decode_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    if arch.frontend != "none":
+        raise SystemExit("serve driver supports token LMs (use token archs)")
+    model = build_model(arch)
+    params = model.init(jax.random.key(args.seed))
+    B = args.requests
+    max_len = args.prompt_len + args.gen_len
+    cache = model.init_cache(B, max_len)
+    decode = jax.jit(model.decode_step)
+
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, arch.vocab_size, (B, args.prompt_len), dtype=np.int32)
+
+    # prefill via teacher-forced decode (exact cache population)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(
+            params, cache, {"tokens": jnp.asarray(prompts[:, t : t + 1])}, jnp.array(t)
+        )
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # batched greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1, : arch.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.gen_len):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = decode(
+            params, cache, {"tokens": tok}, jnp.array(args.prompt_len + i)
+        )
+        tok = jnp.argmax(logits[:, -1, : arch.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    tps = B * args.gen_len / t_decode
+    print(f"arch={arch.name} requests={B} prompt={args.prompt_len} gen={args.gen_len}")
+    print(f"prefill {t_prefill*1e3:.1f} ms; decode {t_decode*1e3:.1f} ms "
+          f"({tps:.1f} tok/s aggregate)")
+    print("sample generations (token ids):")
+    for b in range(min(B, 3)):
+        print(f"  req{b}: {gen[b, :12].tolist()}...")
+    assert gen.shape == (B, args.gen_len)
+    assert int(gen.max()) < arch.vocab_size
+    return tps
+
+
+if __name__ == "__main__":
+    main()

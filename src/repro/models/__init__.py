@@ -1,0 +1,3 @@
+"""Model zoo: dense/GQA transformers, MoE, RWKV6, Mamba2/Zamba2 hybrid."""
+
+from .model import Model, build_model, synthetic_batch, cross_entropy

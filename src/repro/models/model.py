@@ -1,0 +1,200 @@
+"""Unified model interface: init / forward / loss / cache / decode per family.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods dispatch to the
+family-specific assembly (transformer / rwkv / zamba hybrid).  The loss
+handles the modality quirks (VLM patch prefix, MusicGen codebook heads).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import rwkv_lm, transformer, zamba
+
+PyTree = Any
+
+
+def _family_module(cfg: ArchConfig):
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return rwkv_lm
+    if cfg.family == "hybrid":
+        return zamba
+    return transformer
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token CE in f32.  logits: (..., V), targets: (...) int.
+
+    Partition-friendly formulation: both the logsumexp and the gold-logit
+    term are reductions over the vocab axis, so a vocab-sharded (tensor-
+    parallel) lm_head needs only tiny (B, S) cross-shard reductions — no
+    full-logits all-gather (a take_along_axis gather here costs a 100+ GB
+    collective on the 256k-vocab archs)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return (logz - gold).mean()
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    attn_impl: str = "xla"
+    remat: str = "block"
+    unroll: bool = False  # unroll layer scans (dry-run cost calibration)
+    # optional callable ndim -> Sharding: constrains logits in loss() so the
+    # vocab-parallel CE stays sharded under pjit (set by the launchers)
+    logits_sharding: Optional[Callable[[int], Any]] = None
+    # chunked cross-entropy: compute logits + CE over sequence chunks of this
+    # size inside a rematerialized scan — the full (B, S, V) logits tensor is
+    # never materialized (perf lever: memory term / logits temp buffers)
+    loss_chunk: Optional[int] = None
+
+    # -- parameters ----------------------------------------------------------
+    def init(self, key) -> PyTree:
+        return _family_module(self.cfg).init_params(key, self.cfg)
+
+    def init_shapes(self) -> PyTree:
+        """Parameter ShapeDtypeStructs without allocation (for dry-runs)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -- forward / loss --------------------------------------------------------
+    def forward(self, params: PyTree, batch: Dict[str, jax.Array]):
+        return _family_module(self.cfg).forward(
+            params, self.cfg, batch, self.attn_impl, self.remat, self.unroll
+        )
+
+    def _targets_and_hidden_slice(self, batch, seq_len: int):
+        """(hidden slice bounds, targets) aligned for next-token prediction."""
+        cfg = self.cfg
+        if cfg.n_codebooks > 1:
+            return (0, seq_len - 1), batch["targets"][:, 1:]
+        if cfg.frontend == "vlm":
+            P = cfg.num_patches
+            S = batch["tokens"].shape[1]
+            return (P - 1, P - 1 + S - 1), batch["tokens"][:, 1:]
+        return (0, seq_len - 1), batch["tokens"][:, 1:]
+
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        if self.loss_chunk is not None:
+            return self._chunked_loss(params, batch)
+        logits, aux = self.forward(params, batch)
+        if self.logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, self.logits_sharding(logits.ndim)
+            )
+        if cfg.n_codebooks > 1:
+            # MusicGen: logits (B,S,nq,V), next-frame targets (B,S,nq)
+            ce = cross_entropy(logits[:, :-1], batch["targets"][:, 1:])
+        elif cfg.frontend == "vlm":
+            # patch prefix: prediction of token i sits at index P - 1 + i
+            P = cfg.num_patches
+            S = batch["tokens"].shape[1]
+            token_logits = logits[:, P - 1 : P - 1 + S - 1]
+            ce = cross_entropy(token_logits, batch["tokens"][:, 1:])
+        else:
+            ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+        loss = ce
+        if "moe_aux_loss" in aux:
+            loss = loss + 0.01 * aux["moe_aux_loss"]
+        metrics = {"ce": ce, **aux}
+        return loss, metrics
+
+    def _chunked_loss(self, params: PyTree, batch: Dict[str, jax.Array]):
+        """CE via a rematerialized scan over sequence chunks: the (B, S, V)
+        logits are never materialized at once (only (B, chunk, V))."""
+        cfg = self.cfg
+        h, aux = _family_module(cfg).forward(
+            params, cfg, batch, self.attn_impl, self.remat, self.unroll,
+            return_hidden=True,
+        )
+        (lo, hi) = self._targets_and_hidden_slice(batch, h.shape[1])[0]
+        targets = self._targets_and_hidden_slice(batch, h.shape[1])[1]
+        h = h[:, lo:hi]
+        T = h.shape[1]
+        C = min(self.loss_chunk, T)
+        n = T // C
+        rem = T - n * C
+
+        from .transformer import logits_from_hidden
+
+        def head_ce(h_c, t_c):
+            logits = logits_from_hidden(params, cfg, h_c)
+            if self.logits_sharding is not None:
+                logits = jax.lax.with_sharding_constraint(
+                    logits, self.logits_sharding(logits.ndim)
+                )
+            logits = logits.astype(jnp.float32)
+            m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+            logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+            onehot = jax.nn.one_hot(t_c, logits.shape[-1], dtype=logits.dtype)
+            gold = jnp.sum(logits * onehot, axis=-1)
+            return jnp.sum(logz - gold)
+
+        head_ce = jax.checkpoint(head_ce)
+
+        def body(acc, inp):
+            h_c, t_c = inp
+            return acc + head_ce(h_c, t_c), None
+
+        hs = h[:, : n * C].reshape(h.shape[0], n, C, h.shape[-1]).transpose(1, 0, 2, 3)
+        ts = targets[:, : n * C]
+        ts = ts.reshape((ts.shape[0], n, C) + ts.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, ts.ndim + 1))
+        )
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts))
+        count = targets.size if cfg.n_codebooks == 1 else targets.size
+        if rem:
+            total = total + head_ce(h[:, n * C :], targets[:, n * C :])
+        ce = total / count
+        loss = ce
+        if "moe_aux_loss" in aux:
+            loss = loss + 0.01 * aux["moe_aux_loss"]
+        return loss, {"ce": ce, **aux}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        return _family_module(self.cfg).init_cache(self.cfg, batch, max_len)
+
+    def decode_step(
+        self,
+        params: PyTree,
+        cache: PyTree,
+        batch: Dict[str, jax.Array],
+        position: jax.Array,
+    ):
+        return _family_module(self.cfg).decode_step(
+            params, self.cfg, cache, batch, position, self.unroll
+        )
+
+
+def build_model(
+    cfg: ArchConfig, attn_impl: str = "xla", remat: str = "block", unroll: bool = False
+) -> Model:
+    return Model(cfg, attn_impl, remat, unroll)
+
+
+def synthetic_batch(cfg: ArchConfig, batch: int, seq: int, key=None) -> Dict[str, jax.Array]:
+    """A synthetic batch with the right structure for the family (tests/benches)."""
+    key = key if key is not None else jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.dtype(cfg.activation_dtype)
+    if cfg.frontend == "audio":
+        return {
+            "frame_embeds": jax.random.normal(k1, (batch, seq, cfg.d_model), dtype),
+            "targets": jax.random.randint(k2, (batch, seq, cfg.n_codebooks), 0, cfg.vocab_size),
+        }
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.frontend == "vlm":
+        out["patch_embeds"] = jax.random.normal(
+            k2, (batch, cfg.num_patches, cfg.d_model), dtype
+        )
+    return out

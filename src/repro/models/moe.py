@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Design (MaxText/switch-style, static shapes, GSPMD-friendly):
+  * tokens are grouped by batch row (groups stay aligned with the data
+    shards, so routing is local until the expert einsum);
+  * per group, (token, slot) pairs are sorted by expert id; each expert
+    takes its first C = ceil(T * k / E * capacity_factor) tokens, the rest
+    are dropped (their combine weight is zeroed — standard capacity drop);
+  * expert FFNs run as one batched einsum over the (E, C, d) buckets, so the
+    expert dimension can be sharded ("expert parallelism") when E divides
+    the model axis, else the FFN hidden dim is sharded (TP-in-expert);
+  * router uses top-k softmax (Mixtral normalization) + switch aux loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import dense_init
+
+
+def expert_capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    moe = cfg.moe
+    c = math.ceil(tokens_per_group * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(4, (c + 3) // 4 * 4)  # pad to a multiple of 4
+
+
+def init_moe(key, cfg: ArchConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    moe = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, moe.num_experts
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(kr, d, (d, E), jnp.float32),
+        "wi": dense_init(ki, d, (E, d, ff), dtype),
+        "wo": dense_init(ko, ff, (E, ff, d), dtype),
+    }
+    if cfg.mlp_act.endswith("_glu"):
+        p["wg"] = dense_init(kg, d, (E, d, ff), dtype)
+    return p
+
+
+def _expert_ffn(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (E, C, d) -> (E, C, d), batched over experts."""
+    h = jnp.einsum("ecd,edf->ecf", x, p["wi"])
+    if cfg.mlp_act == "silu_glu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    elif cfg.mlp_act == "gelu_glu":
+        h = jax.nn.gelu(h) * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (B, S, d), aux metrics (load-balance loss, drop rate)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    C = expert_capacity(cfg, S)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)  # (B,S,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)  # Mixtral renorm
+
+    # Switch aux loss: E * sum_e (fraction of tokens to e) * (mean prob of e)
+    assign1 = jax.nn.one_hot(top_ids[..., 0], E, dtype=jnp.float32)
+    frac = assign1.mean(axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(frac * mean_prob)
+
+    def group_dispatch(xg, idsg, wg):
+        # xg: (S, d); idsg: (S, k); wg: (S, k)
+        ids = idsg.reshape(-1)  # (S*k,)
+        tok = jnp.repeat(jnp.arange(S), k)
+        w = wg.reshape(-1)
+        order = jnp.argsort(ids, stable=True)
+        ids_s, tok_s, w_s = ids[order], tok[order], w[order]
+        # rank of each entry within its expert
+        starts = jnp.searchsorted(ids_s, jnp.arange(E), side="left")  # (E,)
+        rank = jnp.arange(S * k) - starts[ids_s]
+        keep = rank < C
+        slot = jnp.where(keep, ids_s * C + rank, E * C)  # dropped -> overflow slot
+        bucket = jnp.zeros((E * C + 1, d), x.dtype)
+        bucket = bucket.at[slot].add(xg[tok_s] * keep[:, None].astype(x.dtype))
+        return bucket[:-1].reshape(E, C, d), (tok_s, w_s, keep, slot)
+
+    buckets, scatter_info = jax.vmap(group_dispatch)(x, top_ids, top_w)
+    # buckets: (B, E, C, d) -> merge groups into the capacity dim for one
+    # big expert einsum: (E, B*C, d)
+    eb = buckets.transpose(1, 0, 2, 3).reshape(E, B * C, d)
+    eo = _expert_ffn(p, eb, cfg)
+    out_buckets = eo.reshape(E, B, C, d).transpose(1, 0, 2, 3)  # (B,E,C,d)
+
+    def group_combine(ob, info):
+        tok_s, w_s, keep, slot = info
+        obf = jnp.concatenate([ob.reshape(E * C, d), jnp.zeros((1, d), ob.dtype)])
+        vals = obf[slot] * (w_s * keep)[:, None].astype(ob.dtype)
+        return jnp.zeros((S, d), ob.dtype).at[tok_s].add(vals)
+
+    y = jax.vmap(group_combine)(out_buckets, scatter_info)
+    drop_rate = 1.0 - jnp.mean(
+        jax.vmap(lambda info: info[2].astype(jnp.float32).mean())(scatter_info)
+    )
+    return y, {"moe_aux_loss": aux_loss, "moe_drop_rate": drop_rate}

@@ -1,0 +1,229 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay, plus squared-ReLU channel mix.
+
+Simplifications vs the public checkpoint (noted in DESIGN.md):
+  * token-shift interpolation coefficients are static learned vectors (the
+    paper's ddlerp adds a data-dependent low-rank term to these as well);
+  * the decay keeps the Finch signature feature: a low-rank data-dependent
+    component  w_t = exp(-exp(w0 + tanh(x W_a) W_b)).
+
+The sequence mix is computed in *chunked* form (chunk length Q):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+which gives, with cumulative log-decay  lw_t = sum_{j<=t} log w_j:
+    o_t = r_t ⊙ exp(lw_{t-1}) · S_chunk0  +  sum_{s<t} (r_t ⊙ e^{lw_{t-1}-lw_s}) · k_s v_s^T
+          + (r_t ⊙ u ⊙ k_t) v_t
+The chunked form is O(S * Q) and is also the blueprint of the Pallas kernel
+(repro/kernels/rwkv6)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import apply_norm, dense_init, init_norm
+
+PyTree = Dict[str, jax.Array]
+
+
+def init_time_mix(key, cfg: ArchConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    lora = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 8)
+    return {
+        "mix_rkvg": jnp.full((4, d), 0.5, jnp.float32),  # token-shift mixes
+        "wr": dense_init(ks[0], d, (d, d), dtype),
+        "wk": dense_init(ks[1], d, (d, d), dtype),
+        "wv": dense_init(ks[2], d, (d, d), dtype),
+        "wg": dense_init(ks[3], d, (d, d), dtype),
+        "wo": dense_init(ks[4], d, (d, d), dtype),
+        "w0": jnp.full((d,), -4.0, jnp.float32),  # base decay (slow)
+        "wa": dense_init(ks[5], d, (d, lora), jnp.float32),
+        "wb": dense_init(ks[6], lora, (lora, d), jnp.float32),
+        "u": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((H, cfg.rwkv.head_dim), jnp.float32),  # per-head groupnorm
+    }
+
+
+def init_channel_mix(key, cfg: ArchConfig, dtype) -> PyTree:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(k1, d, (d, ff), dtype),
+        "wv": dense_init(k2, ff, (ff, d), dtype),
+    }
+
+
+def token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Shift sequence right by one; position 0 gets `prev` (decode carry)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _chunked_wkv(
+    r, k, v, logw, u, state0, chunk: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked RWKV6 sequence mix.
+
+    r,k,v: (B, S, H, P); logw: (B, S, H, P) (log decay, <= 0);
+    u: (H, P); state0: (B, H, P, P) mapping key-dim -> value-dim.
+    Returns (out (B,S,H,P), final state).
+    """
+    B, S, H, P = r.shape
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad with logw=0 (decay 1) and zero r/k/v -> state unaffected
+        pad = Q - S % Q
+        padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        r, k, v, logw = padfn(r), padfn(k), padfn(v), padfn(logw)
+        S = S + pad
+    n = S // Q
+
+    def chunk_step(state, inp):
+        rc, kc, vc, lwc = inp  # (B, Q, H, P) each
+        clw = jnp.cumsum(lwc, axis=1)  # cumulative log decay inside chunk
+        # decay from chunk start to just BEFORE t: exp(clw_{t-1}) <= 1
+        dec_in = jnp.exp(clw - lwc)  # (B,Q,H,P) = exp(clw_{t-1})
+        # inter-chunk: o_inter[t] = (r_t * dec_in[t]) . state0
+        o_inter = jnp.einsum("bqhp,bhpo->bqho", rc * dec_in, state)
+        # intra-chunk: M[t,s] = sum_p r_t[p] e^{clw_{t-1}[p]-clw_s[p]} k_s[p], s<t.
+        # Computed in the numerically-safe direct form: every exponent is
+        # clw_{t-1} - clw_s <= 0 for s < t (clw is non-increasing), so exp
+        # never overflows.  (The factorized matmul form e^{clw}·e^{-clw}
+        # overflows for strong decay — this is also why the Pallas kernel
+        # tiles (t, s) blocks; see kernels/rwkv6.)
+        diff = (clw - lwc)[:, :, None] - clw[:, None, :]  # (B,Q,Q,H,P), t x s
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        expdiff = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -jnp.inf))
+        scores = jnp.einsum("bqhp,bshp,bqshp->bqsh", rc, kc, expdiff)
+        # current-token bonus: (r_t ⊙ u ⊙ k_t) v_t
+        diag = jnp.einsum("bqhp,bqhp->bqh", rc, u[None, None] * kc)
+        o_intra = jnp.einsum("bqsh,bsho->bqho", scores, vc)
+        o_intra = o_intra + diag[..., None] * vc
+        # state update: S' = diag(e^{clw_Q}) S + sum_s (k_s e^{clw_Q-clw_s}) v_s^T
+        # (both factors <= 1: safe.)
+        decay_all = jnp.exp(clw[:, -1])  # (B,H,P)
+        carry_k = kc * jnp.exp(clw[:, -1][:, None] - clw)  # (B,Q,H,P)
+        state_new = state * decay_all[..., None] + jnp.einsum(
+            "bqhp,bqho->bhpo", carry_k, vc
+        )
+        return state_new, o_inter + o_intra
+
+    def split(t):
+        return t.reshape(B, n, Q, H, P).transpose(1, 0, 2, 3, 4)
+
+    state, outs = jax.lax.scan(
+        chunk_step, state0, (split(r), split(k), split(v), split(logw))
+    )
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)[:, :S_orig], state
+
+
+def apply_time_mix(
+    p: PyTree,
+    x: jax.Array,
+    cfg: ArchConfig,
+    prev_token: jax.Array,  # (B, d): last token of previous segment
+    state0: jax.Array,  # (B, H, P, P)
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_state, new_prev_token)."""
+    B, S, d = x.shape
+    P = cfg.rwkv.head_dim
+    H = d // P
+    xs = token_shift(x, prev_token)
+    mix = p["mix_rkvg"].astype(x.dtype)
+    xr = x * mix[0] + xs * (1 - mix[0])
+    xk = x * mix[1] + xs * (1 - mix[1])
+    xv = x * mix[2] + xs * (1 - mix[2])
+    xg = x * mix[3] + xs * (1 - mix[3])
+    r = (xr @ p["wr"]).reshape(B, S, H, P)
+    k = (xk @ p["wk"]).reshape(B, S, H, P)
+    v = (xv @ p["wv"]).reshape(B, S, H, P)
+    g = jax.nn.silu(xg @ p["wg"])
+    # Finch data-dependent decay (f32 for stability)
+    dd = jnp.tanh(xk.astype(jnp.float32) @ p["wa"]) @ p["wb"]
+    logw = -jnp.exp(p["w0"] + dd)  # (B,S,d), <= 0
+    logw = logw.reshape(B, S, H, P)
+    u = p["u"].reshape(H, P)
+    out, state = _chunked_wkv(
+        r.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        logw,
+        u,
+        state0,
+        chunk,
+    )
+    # per-head group norm
+    mean = out.mean(-1, keepdims=True)
+    var = ((out - mean) ** 2).mean(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5) * p["ln_x"]
+    out = out.reshape(B, S, d).astype(x.dtype) * g
+    return out @ p["wo"], state, x[:, -1, :]
+
+
+def apply_channel_mix(
+    p: PyTree, x: jax.Array, prev_token: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    xs = token_shift(x, prev_token)
+    mix = p["mix_k"].astype(x.dtype)
+    xk = x * mix + xs * (1 - mix)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"], x[:, -1, :]
+
+
+def init_rwkv_block(key, cfg: ArchConfig, dtype) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_norm(cfg),
+        "time_mix": init_time_mix(k1, cfg, dtype),
+        "norm2": init_norm(cfg),
+        "channel_mix": init_channel_mix(k2, cfg, dtype),
+    }
+
+
+def apply_rwkv_block(
+    p: PyTree, x: jax.Array, cfg: ArchConfig, state: Dict[str, jax.Array], chunk: int = 32
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """state: {"wkv": (B,H,P,P), "shift_t": (B,d), "shift_c": (B,d)}."""
+    h = apply_norm(p["norm1"], x, cfg)
+    out, wkv, shift_t = apply_time_mix(
+        p["time_mix"], h, cfg, state["shift_t"], state["wkv"], chunk
+    )
+    x = x + out
+    h = apply_norm(p["norm2"], x, cfg)
+    out, shift_c = apply_channel_mix(p["channel_mix"], h, state["shift_c"])
+    x = x + out
+    return x, {"wkv": wkv, "shift_t": shift_t, "shift_c": shift_c}
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    P = cfg.rwkv.head_dim
+    H = d // P
+    return {
+        "wkv": jnp.zeros((batch, H, P, P), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), jnp.dtype(cfg.activation_dtype)),
+        "shift_c": jnp.zeros((batch, d), jnp.dtype(cfg.activation_dtype)),
+    }
+
+
+def reference_wkv(r, k, v, logw, u, state0):
+    """O(S) sequential oracle for tests: direct recurrence."""
+    B, S, H, P = r.shape
+
+    def step(state, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], jnp.exp(logw[:, t])
+        att = state + u[None, :, :, None] * kt[..., None] * vt[..., None, :]
+        ot = jnp.einsum("bhp,bhpo->bho", rt, att)
+        state = state * wt[..., None] + kt[..., None] * vt[..., None, :]
+        return state, ot
+
+    state, outs = jax.lax.scan(step, state0, jnp.arange(S))
+    return outs.transpose(1, 0, 2, 3), state

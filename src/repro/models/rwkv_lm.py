@@ -1,0 +1,103 @@
+"""RWKV6 language model assembly (attention-free family)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import apply_norm, embed_init, init_norm
+from .rwkv import apply_rwkv_block, init_rwkv_block, init_rwkv_state
+from .transformer import logits_from_hidden
+
+PyTree = Any
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_rwkv_block(k, cfg, dtype))(layer_keys)
+    p = {
+        "embed": embed_init(ke, (cfg.padded_vocab_size, cfg.d_model), dtype),
+        "embed_norm": init_norm(cfg),  # RWKV normalises the embedding
+        "layers": layers,
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tied_embeddings:
+        p["lm_head"] = embed_init(ko, (cfg.d_model, cfg.padded_vocab_size), dtype)
+    return p
+
+
+def forward(
+    p: PyTree,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    attn_impl: str = "xla",
+    remat: str = "block",
+    unroll: bool = False,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    del attn_impl  # attention-free
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(dtype)
+    x = apply_norm(p["embed_norm"], x, cfg)
+    B = x.shape[0]
+
+    def body(h, layer_p):
+        state = init_rwkv_state(cfg, B)  # fresh zero state: full sequence pass
+        out, _ = apply_rwkv_block(layer_p, h, cfg, state)
+        return out, None
+
+    if remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, p["layers"], unroll=True if unroll else 1)
+    x = apply_norm(p["final_norm"], x, cfg)
+    if return_hidden:
+        return x, {}
+    return logits_from_hidden(p, cfg, x), {}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    del max_len  # O(1) state — the point of the architecture
+    d = cfg.d_model
+    P = cfg.rwkv.head_dim
+    H = d // P
+    dtype = jnp.dtype(cfg.activation_dtype)
+    L = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, batch, H, P, P), jnp.float32),
+        "shift_t": jnp.zeros((L, batch, d), dtype),
+        "shift_c": jnp.zeros((L, batch, d), dtype),
+    }
+
+
+def decode_step(
+    p: PyTree,
+    cfg: ArchConfig,
+    cache: PyTree,
+    batch: Dict[str, jax.Array],
+    position: jax.Array,
+    unroll: bool = False,
+) -> Tuple[jax.Array, PyTree]:
+    del position  # recurrent state carries all positional information
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(dtype)
+    x = apply_norm(p["embed_norm"], x, cfg)
+
+    def body(h, inputs):
+        layer_p, wkv, st, sc = inputs
+        out, ns = apply_rwkv_block(
+            layer_p, h, cfg, {"wkv": wkv, "shift_t": st, "shift_c": sc}
+        )
+        return out, (ns["wkv"], ns["shift_t"], ns["shift_c"])
+
+    x, (wkv_n, st_n, sc_n) = jax.lax.scan(
+        body, x, (p["layers"], cache["wkv"], cache["shift_t"], cache["shift_c"]),
+        unroll=True if unroll else 1,
+    )
+    x = apply_norm(p["final_norm"], x, cfg)
+    logits = logits_from_hidden(p, cfg, x)
+    return logits, {"wkv": wkv_n, "shift_t": st_n, "shift_c": sc_n}

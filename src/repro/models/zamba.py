@@ -1,0 +1,159 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a *shared* attention block.
+
+Layer layout: groups of ``shared_attn_every`` Mamba2 layers, each group
+followed by one application of a single shared transformer block (attention
++ MLP, same weights every application — the Zamba2 weight-sharing trick).
+The shared block consumes the concatenated [hidden, initial-embedding]
+stream in the public model; we feed the hidden stream (simplification noted
+in DESIGN.md §Arch-applicability).
+
+Scan structure: outer scan over groups (the shared block's weights are
+closed over, not scanned), inner scan over the group's Mamba2 layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import apply_mlp, apply_norm, embed_init, init_mlp, init_norm
+from .mamba2 import apply_mamba2, init_mamba2, init_mamba2_state
+from .transformer import (
+    apply_block,
+    apply_block_decode,
+    init_block,
+    logits_from_hidden,
+)
+
+PyTree = Any
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, km, ks, ko = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.n_layers)
+    G, L = n_groups(cfg), cfg.shared_attn_every
+    mamba = jax.vmap(lambda k: {"norm": init_norm(cfg), "mamba": init_mamba2(k, cfg, dtype)})(
+        layer_keys
+    )
+    # reshape stacked layers to (G, L, ...)
+    mamba = jax.tree.map(lambda a: a.reshape((G, L) + a.shape[1:]), mamba)
+    p = {
+        "embed": embed_init(ke, (cfg.padded_vocab_size, cfg.d_model), dtype),
+        "mamba_layers": mamba,
+        "shared_attn": init_block(ks, cfg),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tied_embeddings:
+        p["lm_head"] = embed_init(ko, (cfg.d_model, cfg.padded_vocab_size), dtype)
+    return p
+
+
+def _group_forward(cfg, shared_p, positions, attn_impl, remat, unroll=False):
+    def mamba_body(h, layer_p):
+        # fresh zero state per layer: the full sequence is processed at once
+        states = init_mamba2_state(cfg, h.shape[0])
+        out, _ = apply_mamba2(
+            layer_p["mamba"], apply_norm(layer_p["norm"], h, cfg), cfg, states
+        )
+        return h + out, None
+
+    if remat == "block":
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def group_body(h, group_p):
+        h, _ = jax.lax.scan(mamba_body, h, group_p, unroll=True if unroll else 1)
+        h, _ = apply_block(shared_p, h, cfg, positions, attn_impl)
+        return h, None
+
+    return group_body
+
+
+def forward(
+    p: PyTree,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    attn_impl: str = "xla",
+    remat: str = "block",
+    unroll: bool = False,
+    return_hidden: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(dtype)
+    positions = jnp.arange(x.shape[1])
+    group_body = _group_forward(
+        cfg, p["shared_attn"], positions, attn_impl, remat, unroll
+    )
+    x, _ = jax.lax.scan(group_body, x, p["mamba_layers"], unroll=True if unroll else 1)
+    x = apply_norm(p["final_norm"], x, cfg)
+    if return_hidden:
+        return x, {}
+    return logits_from_hidden(p, cfg, x), {}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> PyTree:
+    from .mamba2 import ssm_dims
+
+    G = n_groups(cfg)
+    L = cfg.shared_attn_every
+    s = cfg.ssm
+    d_in, H, P, N = ssm_dims(cfg)
+    dtype = jnp.dtype(cfg.activation_dtype)
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "conv": jnp.zeros((G, L, batch, s.conv_width - 1, d_in + 2 * s.n_groups * N), jnp.float32),
+        "ssm": jnp.zeros((G, L, batch, H, N, P), jnp.float32),
+        # one KV cache per shared-attention application
+        "k": jnp.zeros((G, batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((G, batch, max_len, K, hd), dtype),
+    }
+
+
+def decode_step(
+    p: PyTree,
+    cfg: ArchConfig,
+    cache: PyTree,
+    batch: Dict[str, jax.Array],
+    position: jax.Array,
+    unroll: bool = False,
+) -> Tuple[jax.Array, PyTree]:
+    dtype = jnp.dtype(cfg.activation_dtype)
+    x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(dtype)
+
+    def mamba_body(h, inputs):
+        layer_p, conv, ssm = inputs
+        out, ns = apply_mamba2(
+            layer_p["mamba"],
+            apply_norm(layer_p["norm"], h, cfg),
+            cfg,
+            {"conv": conv, "ssm": ssm},
+        )
+        return h + out, (ns["conv"], ns["ssm"])
+
+    def group_body(h, inputs):
+        group_p, conv, ssm, k_cache, v_cache = inputs
+        h, (conv_n, ssm_n) = jax.lax.scan(
+            mamba_body, h, (group_p, conv, ssm), unroll=True if unroll else 1
+        )
+        h, attn_cache = apply_block_decode(
+            p["shared_attn"], h, cfg, {"k": k_cache, "v": v_cache}, position, position
+        )
+        return h, (conv_n, ssm_n, attn_cache["k"], attn_cache["v"])
+
+    x, (conv_n, ssm_n, k_n, v_n) = jax.lax.scan(
+        group_body,
+        x,
+        (p["mamba_layers"], cache["conv"], cache["ssm"], cache["k"], cache["v"]),
+        unroll=True if unroll else 1,
+    )
+    x = apply_norm(p["final_norm"], x, cfg)
+    logits = logits_from_hidden(p, cfg, x)
+    return logits, {"conv": conv_n, "ssm": ssm_n, "k": k_n, "v": v_n}

@@ -1,0 +1,107 @@
+"""Sharded AdamW with warmup-cosine schedule and global-norm clipping.
+
+Functional optimizer (init/update pair over pytrees) so the optimizer state
+inherits the parameter sharding specs 1:1 (ZeRO-style partitioning falls out
+of the pjit in_shardings — no separate optimizer-sharding machinery).
+Moments are f32 regardless of the bf16 parameter dtype (mixed-precision
+master moments; master weights are optional and off by default to match
+common large-model recipes that keep bf16 params + f32 moments).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # i32 scalar
+    m: PyTree  # f32, like params
+    v: PyTree  # f32, like params
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    floor = cfg.min_lr_ratio
+    return cfg.lr * warm * (floor + (1 - floor) * cos)
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / 1D params."""
+    last = str(path[-1]) if path else ""
+    return "scale" not in last and "bias" not in last
+
+
+def update(
+    cfg: AdamWConfig, grads: PyTree, state: AdamWState, params: PyTree
+) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path) and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v), params, grads, state.m, state.v
+    )
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,106 @@
+"""Gradient compression for cross-pod data parallelism.
+
+On the multi-pod mesh the "pod" axis rides the data-center interconnect
+(~4x slower than ICI), so the cross-pod gradient all-reduce is the slowest
+collective of the step.  Two standard compressors, both with error feedback
+(the residual is re-added next step so compression error doesn't bias the
+optimizer — Seide et al. / Karimireddy et al.):
+
+* ``int8``  — per-tensor symmetric quantization: 4x less DCI traffic;
+* ``topk``  — magnitude top-k sparsification (k as a fraction).
+
+Usage pattern (see launch/train.py): gradients are all-reduced over the ICI
+axes at full precision; the pod-axis reduction uses ``compress`` ->
+``jax.lax.psum`` of the dequantized values inside shard_map (the compression
+happens before crossing the slow link).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    residual: PyTree  # error-feedback accumulator (f32, like grads)
+
+
+def init_state(grads_like: PyTree) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 symmetric quantization
+# ---------------------------------------------------------------------------
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+def sparsify_topk(x: jax.Array, frac: float) -> jax.Array:
+    """Keep the top-|frac| fraction by magnitude (as a dense masked tensor —
+    the wire format would send (indices, values); the mask is what matters
+    for the error-feedback math and the traffic model)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_with_feedback(
+    grads: PyTree,
+    state: CompressionState,
+    method: str = "int8",
+    topk_frac: float = 0.01,
+) -> Tuple[PyTree, CompressionState, PyTree]:
+    """Returns (compressed-then-decompressed grads, new state, wire pytree).
+
+    The caller all-reduces the returned grads across the slow axis; the
+    error (original - transmitted) is fed back into the next step.
+    """
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        if method == "int8":
+            q, scale = quantize_int8(gf)
+            sent = dequantize_int8(q, scale)
+            wire = (q, scale)
+        elif method == "topk":
+            sent = sparsify_topk(gf, topk_frac)
+            wire = sent
+        elif method == "none":
+            sent = gf
+            wire = gf
+        else:
+            raise ValueError(f"unknown compression method {method}")
+        return sent, gf - sent, wire
+
+    out = jax.tree.map(one, grads, state.residual)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    sent = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    resid = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    wire = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return sent, CompressionState(residual=resid), wire
+
+
+def wire_bytes(wire: PyTree) -> int:
+    """Traffic of the compressed representation (for the collective model)."""
+    total = 0
+    for leaf in jax.tree.leaves(wire):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,8 @@
+from .fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerTracker,
+    ElasticPlan,
+    plan_mesh,
+    TrainingSupervisor,
+    SupervisorReport,
+)

@@ -1,0 +1,122 @@
+"""Train / serve step builders: microbatched gradient accumulation, AdamW
+update, and the decode step — the functions the launchers jit/lower.
+
+``make_train_step`` returns a pure ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` function:
+
+* the global batch is split into ``microbatches`` chunks scanned with
+  gradient accumulation (the activation-memory knob for the big archs);
+* remat policy comes from the model (scan-over-layers checkpointing);
+* the AdamW update runs in f32 with global-norm clipping.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def _split_microbatch(batch: Dict[str, jax.Array], n: int, i: jax.Array):
+    def slice_one(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+    return jax.tree.map(slice_one, batch)
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: adamw.AdamWConfig,
+    microbatches: int = 1,
+    grad_shardings: Optional[PyTree] = None,
+    unroll_loop: bool = False,
+) -> Callable:
+    """``grad_shardings``: optional pytree of Shardings (like params) —
+    constrains gradients and the accumulator so ZeRO stays sharded under
+    pjit (otherwise XLA may all-reduce full f32 gradients).
+    ``unroll_loop`` unrolls the gradient-accumulation scan (dry-run cost
+    calibration: XLA counts while bodies once)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.lax.with_sharding_constraint(grads, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain(grads)
+        else:
+            def acc_body(carry, i):
+                g_acc, l_acc = carry
+                mb = _split_microbatch(batch, microbatches, i)
+                (loss, _), grads = grad_fn(params, mb)
+                grads = constrain(grads)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                return (constrain(g_acc), l_acc + loss), None
+
+            g0 = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), jnp.arange(microbatches),
+                unroll=True if unroll_loop else 1,
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = l_sum / microbatches
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def make_prefill_step(model: Model) -> Callable:
+    """Prefill: forward over the prompt; returns last-position logits.
+    (KV-cache population for the transformer families reuses decode_step in
+    a scan for exactness; at serving scale the flash kernel path emits the
+    cache directly — dry-runs lower `forward` which has identical cost.)"""
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1]
+
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode(params, cache, batch, position):
+        logits, new_cache = model.decode_step(params, cache, batch, position)
+        next_token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits[:, -1], axis=-1)
+        return next_token, new_cache
+
+    return decode

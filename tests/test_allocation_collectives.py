@@ -1,0 +1,250 @@
+"""Tests for the allocation policy engine, TPU collective cost model and
+topology extensions."""
+
+import itertools
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import (
+    ElongatedPolicy,
+    HintedPolicy,
+    IsoperimetricPolicy,
+    JobRequest,
+    ListPolicy,
+    MachineState,
+    avoidable_contention_ratio,
+    simulate_queue,
+)
+from repro.core.bgq import MIDPLANE_DIMS, MIRA_SCHEDULER_PARTITIONS
+from repro.core.collectives import (
+    AxisEmbedding,
+    CollectiveCostModel,
+    TorusFabric,
+    assign_axes,
+    best_slice_geometry,
+    ring_all_gather_time,
+    ring_all_reduce_time,
+    slice_fabric,
+    worst_slice_geometry,
+)
+from repro.core.topology import (
+    DragonflyGroup,
+    HyperX,
+    hypercube_bisection,
+    hypercube_harper_bound,
+    _harper_rec,
+)
+
+
+# ---------------------------------------------------------------------------
+# Allocation
+# ---------------------------------------------------------------------------
+def test_machine_state_allocate_release():
+    m = MachineState((4, 2, 2, 2))
+    p = m.allocate(1, (2, 2, 1, 1))
+    assert p is not None and m.free_units == 32 - 4
+    m.release(1)
+    assert m.free_units == 32
+
+
+def test_placement_respects_occupancy():
+    m = MachineState((2, 2, 1, 1))
+    assert m.allocate(1, (2, 1, 1, 1)) is not None
+    assert m.allocate(2, (2, 1, 1, 1)) is not None
+    assert m.allocate(3, (1, 1, 1, 1)) is None  # machine full
+
+
+def test_isoperimetric_policy_prefers_balanced_geometry():
+    m = MachineState((7, 2, 2, 2))
+    prefs = IsoperimetricPolicy().geometry_preferences(m, 8)
+    assert prefs[0] == (2, 2, 2, 1)
+    worst = ElongatedPolicy().geometry_preferences(m, 8)
+    assert worst[0][0] == 7 or worst[0][0] == 4  # most elongated that fits
+    # elongated prefers the longest first dimension available
+    assert worst[0][0] >= prefs[0][0]
+
+
+def test_queue_simulation_policies_differ_in_comm_time():
+    jobs = [JobRequest(i, 8, True, 1.0) for i in range(3)]
+    iso = simulate_queue((7, 2, 2, 2), jobs, IsoperimetricPolicy(), MIDPLANE_DIMS)
+    elo = simulate_queue((7, 2, 2, 2), jobs, ElongatedPolicy(), MIDPLANE_DIMS)
+    assert not iso.rejected and not elo.rejected
+    assert iso.mean_comm_time < elo.mean_comm_time
+    # paper's x2: best (2,2,2,1) vs worst (4,2,1,1) pairing time
+    assert elo.mean_comm_time / iso.mean_comm_time == pytest.approx(2.0)
+
+
+def test_list_policy_matches_mira():
+    jobs = [JobRequest(0, 16, True, 1.0)]
+    res = simulate_queue(
+        (4, 4, 3, 2), jobs, ListPolicy(MIRA_SCHEDULER_PARTITIONS), MIDPLANE_DIMS
+    )
+    assert res.jobs[0].placement.geometry == (4, 4, 1, 1)
+
+
+def test_hinted_policy_uses_iso_only_for_contention_bound():
+    m = MachineState((7, 2, 2, 2))
+    pol = HintedPolicy()
+    iso_prefs = pol.geometry_preferences(m, 8, True)
+    any_prefs = pol.geometry_preferences(m, 8, False)
+    assert iso_prefs[0] == (2, 2, 2, 1)
+    assert any_prefs[0] != iso_prefs[0]
+
+
+def test_avoidable_contention_ratio_juqueen8():
+    assert avoidable_contention_ratio((7, 2, 2, 2), 8, MIDPLANE_DIMS) == pytest.approx(
+        2.0
+    )
+
+
+def test_queue_waits_for_release_when_full():
+    jobs = [JobRequest(i, 4, True, 1.0) for i in range(3)]
+    res = simulate_queue((2, 2, 1, 1), jobs, IsoperimetricPolicy())
+    assert not res.rejected
+    assert res.jobs[1].start >= res.jobs[0].end  # second job waited
+
+
+# ---------------------------------------------------------------------------
+# TPU fabric / collectives
+# ---------------------------------------------------------------------------
+def test_slice_fabric_wrap_semantics():
+    pod = TorusFabric((16, 16), (True, True))
+    s = slice_fabric(pod, (16, 4))
+    assert s.dims == (16, 4)
+    assert s.wrap == (True, False)  # only the full dimension keeps wrap
+    s2 = slice_fabric(pod, (8, 8))
+    assert s2.wrap == (False, False)
+
+
+def test_tpu_slice_geometry_16_chips():
+    """On a 16x16 wrapped pod, a 4x4 slice beats 16x1 and 8x2 (x2 bisection)."""
+    pod = TorusFabric((16, 16), (True, True))
+    best = best_slice_geometry(pod, 16)
+    worst = worst_slice_geometry(pod, 16)
+    assert best == ((4, 4), 4)
+    assert worst[1] == 2
+
+
+def test_tpu_3d_pod_partial_dim_effect():
+    """v4-style 3D pod: full-ring wrap can double a slice's bisection."""
+    pod = TorusFabric((16, 16, 8), (True, True, True))
+    good = slice_fabric(pod, (8, 4, 4))  # covers the 8-dim: wrapped
+    assert good.wrap.count(True) == 1
+    assert good.bisection_links() == 32
+    bad = slice_fabric(pod, (16, 8, 1))
+    assert bad.bisection_links() == 16
+
+
+def test_bgq_fabric_matches_paper_bisection():
+    fab = TorusFabric((16, 4, 4, 4, 2), (True,) * 5, double_link_on_2=True)
+    assert fab.bisection_links() == 256  # Mira 4-midplane (4,1,1,1) partition
+
+
+def test_ring_collective_times():
+    emb = AxisEmbedding(size=16, wrapped=True)
+    bw = 50e9
+    # all-gather 1 GB output: (15/16 GB) / (2 * 50 GB/s)
+    t = ring_all_gather_time(1e9, emb, bw)
+    assert t == pytest.approx((15 / 16) * 1e9 / (2 * 50e9))
+    # all-reduce = 2x reduce-scatter-equivalent
+    t2 = ring_all_reduce_time(1e9, emb, bw)
+    assert t2 == pytest.approx(2 * t)
+    # chain (no wrap) is 2x slower
+    chain = AxisEmbedding(size=16, wrapped=False)
+    assert ring_all_gather_time(1e9, chain, bw) == pytest.approx(2 * t)
+
+
+def test_assign_axes_prefers_wrapped_dims():
+    fab = TorusFabric((16, 16, 2), (True, False, False))
+    asg = assign_axes(fab, {"data": 16, "model": 16, "pod": 2})
+    # the bigger-pressure axes get dims; 'data' (first in default order) gets
+    # the wrapped 16.
+    data_group = asg.phys_groups[asg.axis_names.index("data")]
+    assert fab.wrap[data_group[0]]
+
+
+def test_assign_axes_multi_dim_axis():
+    fab = TorusFabric((16, 16), (True, True))
+    asg = assign_axes(fab, {"model": 256})
+    assert asg.embedding("model").size == 256
+    model_group = asg.phys_groups[asg.axis_names.index("model")]
+    assert len(model_group) == 2
+
+
+def test_cost_model_all_reduce_vs_axis():
+    fab = TorusFabric((16, 16), (True, True))
+    asg = assign_axes(fab, {"data": 16, "model": 16})
+    cm = CollectiveCostModel(fab, asg)
+    t = cm.time("all-reduce", "data", 1e9)
+    assert t > 0
+    assert cm.effective_axis_bandwidth("data") > 0
+
+
+# ---------------------------------------------------------------------------
+# Topology extensions
+# ---------------------------------------------------------------------------
+def test_hypercube_harper_bisection():
+    for d in range(1, 10):
+        assert _harper_rec(d, 2 ** (d - 1)) == hypercube_bisection(d)
+
+
+def test_harper_bound_brute_force_small():
+    import itertools as it
+
+    d = 4
+    verts = list(it.product((0, 1), repeat=d))
+    edges = [
+        (u, v)
+        for u in verts
+        for v in verts
+        if u < v and sum(a != b for a, b in zip(u, v)) == 1
+    ]
+    for t in range(1, 2 ** (d - 1) + 1):
+        best = min(
+            sum(1 for (u, v) in edges if (u in s) != (v in s))
+            for s in map(set, it.combinations(verts, t))
+        )
+        assert best == hypercube_harper_bound(d, t)
+
+
+def test_hyperx_lindsey_vs_subproducts():
+    hx = HyperX((4, 3, 2))
+    n = hx.num_vertices
+    for t in [2, 4, 6, 12]:
+        lex = hx.lindsey_optimal_cut(t)
+        sub = hx.best_subproduct(t)
+        if sub is not None:
+            assert lex <= sub[1]  # Lindsey order is optimal
+    assert hx.bisection_links() == hx.lindsey_optimal_cut(n // 2)
+
+
+def test_hyperx_brute_force_small():
+    import itertools as it
+
+    hx = HyperX((3, 2))
+    verts = list(it.product(range(3), range(2)))
+    edges = []
+    for u in verts:
+        for v in verts:
+            if u < v and (
+                (u[0] == v[0] and u[1] != v[1]) or (u[1] == v[1] and u[0] != v[0])
+            ):
+                edges.append((u, v))
+    for t in range(1, 4):
+        best = min(
+            sum(1 for (u, v) in edges if (u in s) != (v in s))
+            for s in map(set, it.combinations(verts, t))
+        )
+        assert best == hx.lindsey_optimal_cut(t)
+
+
+def test_dragonfly_weighted_partition():
+    g = DragonflyGroup()
+    best = g.best_subgroup(16)
+    assert best is not None
+    (sa, sb), cut = best
+    assert sa * sb == 16
+    # splitting within K16 only (sb=6 impossible for 16) — check weighted logic
+    assert cut <= g.weighted_cut(16, 1)

@@ -1,0 +1,140 @@
+"""Exact reproduction of the paper's tables (1, 2, 5, 6, 7)."""
+
+import pytest
+
+from repro.core.bgq import (
+    JUQUEEN,
+    JUQUEEN48,
+    JUQUEEN54,
+    MIRA,
+    SEQUOIA,
+    MIDPLANE_NODES,
+    juqueen_partition_table,
+    machine_design_table,
+    mira_partition_table,
+    node_dims_of_midplane_geometry,
+    partition_bisection_links,
+)
+
+# Paper Table 6 (Mira): (midplanes, current geometry, BW, proposed, proposed BW)
+MIRA_TABLE6 = [
+    (1, (1, 1, 1, 1), 256, None, None),
+    (2, (2, 1, 1, 1), 256, None, None),
+    (4, (4, 1, 1, 1), 256, (2, 2, 1, 1), 512),
+    (8, (4, 2, 1, 1), 512, (2, 2, 2, 1), 1024),
+    (16, (4, 4, 1, 1), 1024, (2, 2, 2, 2), 2048),
+    (24, (4, 3, 2, 1), 1536, (3, 2, 2, 2), 2048),
+    (32, (4, 4, 2, 1), 2048, None, None),
+    (48, (4, 4, 3, 1), 3072, None, None),
+    (64, (4, 4, 2, 2), 4096, None, None),
+    (96, (4, 4, 3, 2), 6144, None, None),
+]
+
+# Paper Table 7 (JUQUEEN): (midplanes, worst geometry, worst BW, best, best BW)
+JUQUEEN_TABLE7 = [
+    (1, (1, 1, 1, 1), 256, None, None),
+    (2, (2, 1, 1, 1), 256, None, None),
+    (3, (3, 1, 1, 1), 256, None, None),
+    (4, (4, 1, 1, 1), 256, (2, 2, 1, 1), 512),
+    (5, (5, 1, 1, 1), 256, None, None),
+    (6, (6, 1, 1, 1), 256, (3, 2, 1, 1), 512),
+    (7, (7, 1, 1, 1), 256, None, None),
+    (8, (4, 2, 1, 1), 512, (2, 2, 2, 1), 1024),
+    (10, (5, 2, 1, 1), 512, None, None),
+    (12, (6, 2, 1, 1), 512, (3, 2, 2, 1), 1024),
+    (14, (7, 2, 1, 1), 512, None, None),
+    (16, (4, 2, 2, 1), 1024, (2, 2, 2, 2), 2048),
+    (20, (5, 2, 2, 1), 1024, None, None),
+    (24, (6, 2, 2, 1), 1024, (3, 2, 2, 2), 2048),
+    (28, (7, 2, 2, 1), 1024, None, None),
+    (32, (4, 2, 2, 2), 2048, None, None),
+    (40, (5, 2, 2, 2), 2048, None, None),
+    (48, (6, 2, 2, 2), 2048, None, None),
+    (56, (7, 2, 2, 2), 2048, None, None),
+]
+
+# Paper Table 5 subset: midplanes -> (J-54 geometry, BW), (J-48 geometry, BW)
+TABLE5_J54 = {
+    9: ((3, 3, 1, 1), 768),
+    18: ((3, 3, 2, 1), 1536),
+    27: ((3, 3, 3, 1), 2304),
+    36: ((3, 3, 2, 2), 3072),
+    54: ((3, 3, 3, 2), 4608),
+}
+TABLE5_J48 = {
+    9: ((3, 3, 1, 1), 768),
+    36: ((3, 3, 2, 2), 3072),
+    48: ((4, 3, 2, 2), 3072),
+}
+
+
+def test_machine_definitions():
+    assert MIRA.num_nodes == 49152 and MIRA.node_dims == (16, 16, 12, 8, 2)
+    assert JUQUEEN.num_nodes == 28672 and JUQUEEN.node_dims == (28, 8, 8, 8, 2)
+    assert SEQUOIA.num_nodes == 98304 and SEQUOIA.node_dims == (16, 16, 16, 12, 2)
+    assert JUQUEEN54.num_midplanes == 54 and JUQUEEN48.num_midplanes == 48
+
+
+def test_midplane_is_512_nodes():
+    assert MIDPLANE_NODES == 512
+    assert node_dims_of_midplane_geometry((1, 1, 1, 1)) == (4, 4, 4, 4, 2)
+
+
+@pytest.mark.parametrize("mp,cur,bw,prop,prop_bw", MIRA_TABLE6)
+def test_mira_table6_rows(mp, cur, bw, prop, prop_bw):
+    rows = {r["midplanes"]: r for r in mira_partition_table()}
+    r = rows[mp]
+    assert r["current_geometry"] == cur
+    assert r["current_bw"] == bw
+    assert r["proposed_geometry"] == prop
+    assert r["proposed_bw"] == prop_bw
+    assert r["nodes"] == mp * 512
+
+
+@pytest.mark.parametrize("mp,worst,wbw,best,bbw", JUQUEEN_TABLE7)
+def test_juqueen_table7_rows(mp, worst, wbw, best, bbw):
+    rows = {r["midplanes"]: r for r in juqueen_partition_table()}
+    r = rows[mp]
+    assert r["worst_geometry"] == worst
+    assert r["worst_bw"] == wbw
+    assert r["best_geometry"] == best
+    assert r["best_bw"] == bbw
+
+
+def test_table5_hypothetical_machines():
+    rows = {r["midplanes"]: r for r in machine_design_table()}
+    for mp, (geom, bw) in TABLE5_J54.items():
+        assert rows[mp]["j54_geometry"] == geom
+        assert rows[mp]["j54_bw"] == bw
+    for mp, (geom, bw) in TABLE5_J48.items():
+        assert rows[mp]["j48_geometry"] == geom
+        assert rows[mp]["j48_bw"] == bw
+    # JUQUEEN-48 improves the 48-midplane partition over JUQUEEN (2048 -> 3072)
+    assert rows[48]["juqueen_bw"] == 2048 and rows[48]["j48_bw"] == 3072
+
+
+def test_paper_intro_example_6_midplane_system():
+    """Section 2 example: 3x2x1x1 system, best 1536-node partition is
+    12x4x4x4x2 with 256 links; the 8x6x4x4x2 alternative would have 384."""
+    from repro.core.torus import Torus
+
+    part = Torus((12, 4, 4, 4, 2))
+    assert part.num_vertices == 1536
+    assert part.bisection_links() == 256
+    alt = Torus((8, 6, 4, 4, 2))
+    assert alt.num_vertices == 1536
+    assert alt.bisection_links() == 384
+
+
+def test_machine_bisection_formula():
+    # 2 N / L for the full machines
+    assert MIRA.machine_bisection_links() == 2 * 49152 // 16
+    assert JUQUEEN.machine_bisection_links() == 2 * 28672 // 28
+
+
+def test_sequoia_supports_suboptimal_and_optimal_partitions():
+    # e.g. 16 midplanes: best (2,2,2,2) = 2048, elongated (4,4,1,1) = 1024
+    best = SEQUOIA.best_partition(16)
+    worst = SEQUOIA.worst_partition(16)
+    assert best[0] == (2, 2, 2, 2) and best[1] == 2048
+    assert worst[1] < best[1]

@@ -1,0 +1,125 @@
+"""Tests for the link-level contention model (paper Section 4.1)."""
+
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bgq import node_dims_of_midplane_geometry as node_dims
+from repro.core.contention import (
+    LinkLoads,
+    all_to_all_max_load,
+    furthest_offset,
+    pairing_pairs,
+    pairing_speedup,
+    predict_pairing_time,
+    uniform_offset_max_load,
+)
+
+
+def _exact_pairing_load(dims, split=True):
+    ll = LinkLoads(dims, split_ties=split)
+    for (u, v) in pairing_pairs(dims):
+        ll.add_path(u, v, 1.0)
+        ll.add_path(v, u, 1.0)
+    return ll.max_load()
+
+
+@pytest.mark.parametrize("dims", [(8, 4), (4, 4, 2), (8, 4, 2), (6, 4, 2)])
+def test_exact_simulator_matches_analytic_pairing(dims):
+    exact = _exact_pairing_load(dims)
+    analytic = uniform_offset_max_load(dims, furthest_offset(dims))
+    assert exact == pytest.approx(analytic)
+
+
+@pytest.mark.parametrize("dims", [(8, 4), (4, 4, 2)])
+def test_exact_simulator_matches_analytic_unsplit(dims):
+    exact = _exact_pairing_load(dims, split=False)
+    analytic = uniform_offset_max_load(dims, furthest_offset(dims), split_ties=False)
+    assert exact == pytest.approx(analytic)
+
+
+# Paper Figure 3 (Mira) & Figure 4 (JUQUEEN): predicted speedups.
+PAPER_SPEEDUPS = [
+    # (worst/current geometry, best/proposed geometry, predicted speedup)
+    ((4, 1, 1, 1), (2, 2, 1, 1), 2.0),  # Mira & JUQUEEN, 4 midplanes
+    ((4, 2, 1, 1), (2, 2, 2, 1), 2.0),  # 8 midplanes
+    ((4, 4, 1, 1), (2, 2, 2, 2), 2.0),  # Mira, 16 midplanes
+    ((4, 2, 2, 1), (2, 2, 2, 2), 2.0),  # JUQUEEN, 16 midplanes
+    ((6, 1, 1, 1), (3, 2, 1, 1), 2.0),  # JUQUEEN, 6 midplanes
+    ((6, 2, 1, 1), (3, 2, 2, 1), 2.0),  # JUQUEEN, 12 midplanes
+    ((6, 2, 2, 1), (3, 2, 2, 2), 2.0),  # JUQUEEN, 24 midplanes
+]
+
+
+@pytest.mark.parametrize("worst,best,expected", PAPER_SPEEDUPS)
+def test_paper_predicted_pairing_speedups(worst, best, expected):
+    s = pairing_speedup(node_dims(worst), node_dims(best))
+    assert s == pytest.approx(expected)
+
+
+def test_mira_24_midplane_prediction():
+    """24 midplanes is the exception: geometry speedup is 4/3 (not 2), and
+    the paper's quoted 1.50 is the 16->24 proposed-partition time scaling
+    (x1.5 nodes at equal bisection)."""
+    s = pairing_speedup(node_dims((4, 3, 2, 1)), node_dims((3, 2, 2, 2)))
+    assert s == pytest.approx(4.0 / 3.0)
+    from repro.core.bgq import partition_bisection_links as bw
+
+    t16 = 16 * 512 / (2.0 * bw((2, 2, 2, 2)))
+    t24 = 24 * 512 / (2.0 * bw((3, 2, 2, 2)))
+    assert t24 / t16 == pytest.approx(1.5)
+
+
+def test_juqueen_per_node_bisection_figure4_note():
+    """Fig 4 caption: per-node bisection identical for 4 and 8 midplanes,
+    50% smaller for 6 midplanes — visible in pairing times."""
+    t4 = predict_pairing_time(node_dims((4, 1, 1, 1)), 1.0, 1.0)
+    t6 = predict_pairing_time(node_dims((6, 1, 1, 1)), 1.0, 1.0)
+    t8 = predict_pairing_time(node_dims((4, 2, 1, 1)), 1.0, 1.0)
+    assert t4.time_per_volume == pytest.approx(t8.time_per_volume)
+    assert t6.time_per_volume == pytest.approx(1.5 * t4.time_per_volume)
+
+
+def test_pairing_time_physical_units():
+    """One round with 0.1342 GB messages on the worst 4-midplane partition:
+    max link load = 4 x message over 2 GB/s links -> ~0.27 s/round."""
+    p = predict_pairing_time(node_dims((4, 1, 1, 1)), 0.1342e9, 2.0e9)
+    assert p.max_link_load == pytest.approx(4.0)
+    t_round = p.time_per_volume * 0.1342e9
+    assert 0.2 < t_round < 0.3
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([2, 4, 6, 8]), min_size=1, max_size=3).map(tuple)
+)
+def test_property_pairing_load_halves_when_longest_dim_halves(dims):
+    """Splitting the longest dimension in two (doubling another) never
+    increases the pairing bottleneck — the paper's monotonicity."""
+    dims = tuple(sorted(dims, reverse=True))
+    if dims[0] < 4:
+        return
+    improved = (dims[0] // 2,) + dims[1:] + (2,)
+    a = uniform_offset_max_load(dims, furthest_offset(dims))
+    b = uniform_offset_max_load(improved, furthest_offset(improved))
+    assert b <= a + 1e-12
+
+
+def test_total_hop_volume_conservation():
+    dims = (4, 4, 2)
+    ll = LinkLoads(dims)
+    pairs = pairing_pairs(dims)
+    for (u, v) in pairs:
+        ll.add_path(u, v, 1.0)
+        ll.add_path(v, u, 1.0)
+    # every node sends one message over sum(min-hop distances) hops
+    hops = sum(min(o, a - o) for a, o in zip(dims, furthest_offset(dims)))
+    n = 4 * 4 * 2
+    assert ll.total_hop_volume() == pytest.approx(n * hops)
+
+
+def test_all_to_all_max_load_positive_and_scales():
+    small = all_to_all_max_load((4, 4))
+    big = all_to_all_max_load((8, 8))
+    assert small > 0 and big > small

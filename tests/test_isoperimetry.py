@@ -1,0 +1,167 @@
+"""Tests for the edge-isoperimetric core: exact reproduction of the paper's
+tables plus brute-force validation on small explicit tori."""
+
+import itertools
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.torus import Torus, ExplicitTorus, canonical, factorizations, volume
+from repro.core.isoperimetry import (
+    bollobas_leader_bound,
+    theorem31_bound,
+    lemma32_cut,
+    optimal_cuboid,
+    worst_cuboid,
+    small_set_expansion,
+)
+
+
+# ---------------------------------------------------------------------------
+# Torus basics
+# ---------------------------------------------------------------------------
+def test_canonical_sorts_descending():
+    assert canonical((2, 4, 1, 3)) == (4, 3, 2, 1)
+
+
+def test_degree_and_edges_cubic():
+    t = Torus((4, 4, 4))
+    assert t.degree == 6
+    assert t.num_edges == 3 * 4 * 4 * 4  # D * N edges for a > 2
+
+
+def test_double_link_convention():
+    t = Torus((4, 2))
+    # dim 4: 2 lines... N=8; dim of length 4: 8/4=2 rings of 4 edges = 8
+    # dim of length 2: 8/2=4 pairs with double links = 8 edges
+    assert t.num_edges == 8 + 8
+    assert t.degree == 4
+
+
+def test_eq1_regularity_identity():
+    # k|A| = 2|E(A,A)| + |E(A, comp)| for cuboids
+    t = Torus((6, 4, 2))
+    for c in [(3, 2, 1), (6, 2, 2), (2, 2, 2), (1, 1, 1)]:
+        size = volume(c)
+        assert t.degree * size == 2 * t.cuboid_interior(c) + t.cuboid_cut(c)
+
+
+def test_cuboid_cut_against_explicit_torus():
+    dims = (4, 4, 2)
+    t = Torus(dims)
+    et = ExplicitTorus(dims)
+    assert t.num_edges == et.num_edges
+    for c in [(2, 2, 1), (4, 2, 2), (4, 4, 1), (2, 1, 1), (4, 1, 1), (2, 1, 2)]:
+        verts = et.cuboid_vertices(c)
+        # exact: explicit placement == aligned formula
+        assert et.cut(verts) == t.cuboid_cut_aligned(c)
+        # canonical cut = min over placements <= any aligned placement
+        assert t.cuboid_cut(c) <= t.cuboid_cut_aligned(c)
+        # Eq. 1 for the aligned placement too
+        assert t.degree * len(verts) == 2 * et.interior(verts) + et.cut(verts)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.integers(2, 5), min_size=1, max_size=3).map(tuple),
+    data=st.data(),
+)
+def test_property_cut_interior_identity_explicit(dims, data):
+    """Eq. 1 holds for arbitrary subsets of small explicit tori."""
+    et = ExplicitTorus(dims)
+    n = et.num_vertices
+    verts = list(itertools.product(*(range(a) for a in dims)))
+    k = Torus(dims).degree
+    subset_size = data.draw(st.integers(1, n))
+    subset = data.draw(st.permutations(verts)).__getitem__(slice(subset_size))
+    subset = list(subset)
+    assert k * len(subset) == 2 * et.interior(subset) + et.cut(subset)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.integers(2, 6), min_size=2, max_size=3).map(tuple),
+    data=st.data(),
+)
+def test_property_theorem31_lower_bounds_arbitrary_subsets(dims, data):
+    """The Theorem 3.1 bound holds for every (random) subset of small tori —
+    evidence for the paper's conjecture beyond cuboids."""
+    et = ExplicitTorus(dims)
+    n = et.num_vertices
+    t = data.draw(st.integers(1, n // 2))
+    verts = list(itertools.product(*(range(a) for a in dims)))
+    subset = data.draw(st.permutations(verts))[:t]
+    bound = theorem31_bound(dims, t)
+    assert et.cut(list(subset)) >= bound - 1e-9
+
+
+def test_theorem31_reduces_to_bollobas_leader_on_cubic():
+    for n, D in [(4, 3), (6, 2), (8, 2)]:
+        for t in range(1, n**D // 2 + 1):
+            assert math.isclose(
+                theorem31_bound((n,) * D, t), bollobas_leader_bound(n, D, t)
+            )
+
+
+def test_lemma32_construction_matches_bound_when_integral():
+    dims = (8, 4, 4, 2)
+    for r in range(4):
+        k = math.prod(sorted(dims)[:r]) if r else 1
+        # choose t so that (t/k)^(1/(D-r)) is an integer and fits
+        side = 2
+        t = k * side ** (4 - r)
+        if t > volume(dims) // 2:
+            continue
+        got = lemma32_cut(dims, t, r)
+        if got is None:
+            continue
+        geom, cut = got
+        assert cut == Torus(dims).cuboid_cut(geom)
+
+
+def test_optimal_cuboid_is_min_and_bound_holds():
+    t = Torus((8, 4, 4, 2))
+    for size in [4, 8, 16, 32, 64, 128]:
+        opt = optimal_cuboid(t, size)
+        assert opt is not None
+        # bound <= optimum
+        assert opt.cut >= theorem31_bound(t.dims, size) - 1e-9
+        # every other cuboid is no better
+        for g in t.sub_cuboids(size):
+            assert t.cuboid_cut(g) >= opt.cut
+        w = worst_cuboid(t, size)
+        assert w.cut >= opt.cut
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([2, 4, 6, 8]), min_size=2, max_size=4).map(tuple),
+)
+def test_property_bisection_equals_2N_over_L(dims):
+    """For even-longest-dimension tori, bisection = 2N/L (the BG/Q formula)."""
+    t = Torus(dims)
+    L = t.dims[0]
+    assert t.bisection_links() == 2 * t.num_vertices // L
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_property_factorizations_complete_and_correct(data):
+    n = data.draw(st.integers(1, 64))
+    D = data.draw(st.integers(1, 4))
+    geoms = set(factorizations(n, D))
+    for g in geoms:
+        assert len(g) == D and volume(g) == n and g == canonical(g)
+    # brute-force count for small n
+    brute = set()
+    for combo in itertools.product(range(1, n + 1), repeat=D):
+        if math.prod(combo) == n:
+            brute.add(canonical(combo))
+    assert geoms == brute
+
+
+def test_small_set_expansion_monotone_nonincreasing():
+    t = Torus((4, 4, 2))
+    vals = [small_set_expansion(t, k) for k in (2, 4, 8, 16)]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))

@@ -1,0 +1,151 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_reference
+from repro.kernels.rwkv6.ops import rwkv6_mix
+from repro.kernels.rwkv6.ref import rwkv6_reference
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_reference
+
+TR = lambda t: t.transpose(0, 2, 1, 3)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,S,H,K,hd,blk",
+    [
+        (1, 128, 4, 4, 32, 64),  # MHA
+        (2, 256, 4, 2, 64, 64),  # GQA 2:1
+        (1, 256, 8, 2, 16, 128),  # GQA 4:1, small head dim
+        (1, 64, 2, 1, 128, 32),  # MQA
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, K, hd, blk, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, blk_q=blk, blk_k=blk, interpret=True)
+    ref = TR(attention_reference(TR(q), TR(k), TR(v), causal=True))
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [32, 96, 1024])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.key(1), 3)
+    B, S, H, K, hd = 1, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention(q, k, v, causal=True, window=window, blk_q=64, blk_k=64, interpret=True)
+    ref = TR(attention_reference(TR(q), TR(k), TR(v), causal=True, window=window))
+    np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_asymmetric_blocks():
+    ks = jax.random.split(jax.random.key(2), 3)
+    B, S, H, K, hd = 1, 256, 2, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention(q, k, v, causal=True, blk_q=128, blk_k=32, interpret=True)
+    ref = TR(attention_reference(TR(q), TR(k), TR(v), causal=True))
+    np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,S,H,P,chunk",
+    [(1, 64, 2, 16, 16), (2, 128, 3, 16, 32), (1, 96, 1, 32, 32), (1, 32, 2, 8, 32)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_kernel_sweep(B, S, H, P, chunk, dtype):
+    ks = jax.random.split(jax.random.key(3), 5)
+    r = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, P), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, P), dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, P)) - 1.0)
+    u = jax.random.normal(ks[4], (H, P)) * 0.1
+    out, st = rwkv6_mix(r, k, v, logw, u, chunk=chunk, interpret=True)
+    oref, sref = rwkv6_reference(TR(r), TR(k), TR(v), TR(logw), u)
+    np.testing.assert_allclose(TR(out), oref, **_tol(dtype))
+    np.testing.assert_allclose(st, sref, **_tol(dtype))
+
+
+def test_rwkv6_strong_decay_no_overflow():
+    """Strong decay (the regime where the factorized form overflows)."""
+    ks = jax.random.split(jax.random.key(4), 5)
+    B, S, H, P = 1, 128, 2, 16
+    r = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    logw = jnp.full((B, S, H, P), -5.0)  # very strong decay
+    u = jax.random.normal(ks[4], (H, P)) * 0.1
+    out, st = rwkv6_mix(r, k, v, logw, u, chunk=32, interpret=True)
+    assert bool(jnp.isfinite(out).all()) and bool(jnp.isfinite(st).all())
+    oref, _ = rwkv6_reference(TR(r), TR(k), TR(v), TR(logw), u)
+    np.testing.assert_allclose(TR(out), oref, atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,S,H,P,G,N,chunk",
+    [
+        (1, 64, 2, 16, 1, 8, 16),
+        (2, 128, 4, 16, 2, 8, 32),  # grouped B/C
+        (1, 128, 4, 32, 1, 16, 64),
+        (1, 256, 8, 16, 4, 8, 32),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(B, S, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(5), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    bm = jax.random.normal(ks[3], (B, S, G, N), dtype)
+    cm = jax.random.normal(ks[4], (B, S, G, N), dtype)
+    y, st = ssd_scan(xh, dt, A, bm, cm, chunk=chunk, interpret=True)
+    xw = (xh.astype(jnp.float32) * dt[..., None]).transpose(0, 2, 1, 3)
+    la = (dt * A).transpose(0, 2, 1)[..., None]
+    yref, sref = ssd_reference(
+        xw, la, bm.astype(jnp.float32).transpose(0, 2, 1, 3),
+        cm.astype(jnp.float32).transpose(0, 2, 1, 3),
+    )
+    np.testing.assert_allclose(TR(y), yref, **_tol(dtype))
+    np.testing.assert_allclose(st, sref, **_tol(dtype))
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    """Kernel agrees with the jnp chunked implementation used by the model."""
+    from repro.models.mamba2 import ssd_chunked
+
+    ks = jax.random.split(jax.random.key(6), 5)
+    B, S, H, P, G, N = 1, 64, 2, 16, 1, 8
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    bm = jax.random.normal(ks[3], (B, S, G, N))
+    cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_k, _ = ssd_scan(xh, dt, A, bm, cm, chunk=16, interpret=True)
+    y_m, _ = ssd_chunked(xh, dt, A, bm, cm, jnp.zeros((B, H, N, P)), 16)
+    np.testing.assert_allclose(y_k, y_m, atol=2e-4, rtol=2e-4)
