@@ -1,0 +1,104 @@
+"""Routing-engine micro-benchmark: vectorized DOR vs the per-hop walker.
+
+Acceptance benchmark for the repro.network refactor: an 8x8x8 all-to-all
+routed through the vectorized engine must produce the *identical*
+max-link-load as the historical per-hop Python walker (kept under
+``tests/reference_dor.py``) and be >= 20x faster.
+
+Run standalone (writes BENCH_routing.json):
+
+    PYTHONPATH=src python benchmarks/bench_routing.py [--json PATH]
+
+or via the harness (`PYTHONPATH=src python -m benchmarks.run`), which
+registers :func:`routing_microbench`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.network import LinkLoads, all_to_all_max_load, patterns
+
+_REPO = Path(__file__).resolve().parents[1]
+
+DIMS = (8, 8, 8)
+# The refactor's acceptance bar is 20x; BENCH_ROUTING_MIN_SPEEDUP lets loaded
+# CI runners relax the timing gate without weakening the load-identity check.
+TARGET_SPEEDUP = float(os.environ.get("BENCH_ROUTING_MIN_SPEEDUP", "20"))
+
+
+def _reference_linkloads_cls():
+    """Import the per-hop walker lazily — it lives with the tests, and the
+    harness must not mutate sys.path or require tests/ unless this benchmark
+    actually runs."""
+    tests_dir = str(_REPO / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from reference_dor import ReferenceLinkLoads
+
+    return ReferenceLinkLoads
+
+
+def _time_vectorized(src, dst, vol, repeats: int = 5) -> Tuple[float, float]:
+    best = float("inf")
+    load = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ll = LinkLoads(DIMS)
+        ll.add_batch(src, dst, vol)
+        load = ll.max_load()
+        best = min(best, time.perf_counter() - t0)
+    return best, load
+
+
+def _time_walker(src, dst, vol) -> Tuple[float, float]:
+    walker_cls = _reference_linkloads_cls()  # import outside the timed region
+    t0 = time.perf_counter()
+    ref = walker_cls(DIMS)
+    for s, d, v in zip(src, dst, vol):
+        ref.add_path(tuple(int(x) for x in s), tuple(int(x) for x in d), float(v))
+    return time.perf_counter() - t0, ref.max_load()
+
+
+def routing_microbench() -> Tuple[List[dict], str]:
+    src, dst, vol = patterns.all_to_all(DIMS)
+    t_fast, load_fast = _time_vectorized(src, dst, vol)
+    t_slow, load_slow = _time_walker(src, dst, vol)
+    speedup = t_slow / t_fast
+    closed_form = all_to_all_max_load(DIMS)
+    assert load_fast == load_slow, (load_fast, load_slow)
+    assert abs(load_fast - closed_form) < 1e-9, (load_fast, closed_form)
+    assert speedup >= TARGET_SPEEDUP, f"speedup {speedup:.1f}x < {TARGET_SPEEDUP}x"
+    rows = [
+        {
+            "dims": list(DIMS),
+            "pattern": "all-to-all",
+            "messages": int(len(vol)),
+            "vectorized_s": round(t_fast, 4),
+            "walker_s": round(t_slow, 4),
+            "speedup": round(speedup, 1),
+            "max_link_load": load_fast,
+            "closed_form_load": closed_form,
+        }
+    ]
+    return rows, f"speedup={speedup:.0f}x,max_load={load_fast:g}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_routing.json", help="output path")
+    args = ap.parse_args()
+    rows, derived = routing_microbench()
+    out = Path(args.json)
+    out.write_text(json.dumps({"benchmark": "routing_microbench", "rows": rows}, indent=1))
+    print(f"routing_microbench: {derived} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

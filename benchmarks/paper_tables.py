@@ -21,8 +21,13 @@ from repro.core.bgq import (
     node_dims_of_midplane_geometry,
     partition_bisection_links,
 )
-from repro.core.contention import pairing_speedup, predict_pairing_time
-from repro.core.collectives import TorusFabric, best_slice_geometry, worst_slice_geometry
+from repro.network import (
+    TorusFabric,
+    best_slice_geometry,
+    pairing_speedup,
+    predict_pairing_time,
+    worst_slice_geometry,
+)
 
 
 def table1_6_mira() -> Tuple[List[dict], str]:

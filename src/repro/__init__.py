@@ -1,4 +1,4 @@
 """repro: Network Partitioning and Avoidable Contention — a multi-pod JAX
 training/inference framework with isoperimetric partition-aware allocation."""
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

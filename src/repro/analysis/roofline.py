@@ -28,9 +28,23 @@ import re
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
+from repro.network.fabric import DEFAULT_LINK_BW
+
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
-LINK_BW = 50e9  # bytes/s per ICI link per direction
+LINK_BW = DEFAULT_LINK_BW  # bytes/s per ICI link per direction (repro.network)
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalised across jax versions.
+
+    Older jax returns a list with one dict per program; newer returns the
+    dict directly.  Always returns a (possibly empty) dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

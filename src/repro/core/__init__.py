@@ -2,15 +2,43 @@
 Schwartz, 2020) as a composable library.
 
 Layers:
-  torus / isoperimetry  — the edge-isoperimetric analysis (Theorem 3.1).
+  isoperimetry          — the edge-isoperimetric analysis (Theorem 3.1).
   bgq                   — Blue Gene/Q machine models (paper reproduction).
-  contention            — link-level DOR routing / contention predictions.
-  collectives           — TPU-adapted collective cost model + axis assignment.
-  allocation            — partition allocation policies and queue simulator.
   topology              — hypercube / HyperX / Dragonfly (paper Section 5).
+
+The fabric modeling that used to live here (torus geometry, DOR contention,
+collective cost model, allocation policies) moved to :mod:`repro.network`;
+the ``repro.core.{torus,contention,collectives,allocation}`` modules are
+deprecated re-export shims (see DESIGN.md).  This package's namespace keeps
+exporting the historical names.
 """
 
-from .torus import Torus, canonical, volume, factorizations
+from repro.network import (
+    Torus,
+    canonical,
+    volume,
+    factorizations,
+    LinkLoads,
+    predict_pairing_time,
+    pairing_speedup,
+    uniform_offset_max_load,
+    furthest_offset,
+    TorusFabric,
+    slice_fabric,
+    best_slice_geometry,
+    worst_slice_geometry,
+    assign_axes,
+    CollectiveCostModel,
+    AxisEmbedding,
+    JobRequest,
+    MachineState,
+    ElongatedPolicy,
+    IsoperimetricPolicy,
+    ListPolicy,
+    HintedPolicy,
+    simulate_queue,
+    avoidable_contention_ratio,
+)
 from .isoperimetry import (
     bollobas_leader_bound,
     theorem31_bound,
@@ -31,30 +59,4 @@ from .bgq import (
     mira_partition_table,
     juqueen_partition_table,
     machine_design_table,
-)
-from .contention import (
-    LinkLoads,
-    predict_pairing_time,
-    pairing_speedup,
-    uniform_offset_max_load,
-    furthest_offset,
-)
-from .collectives import (
-    TorusFabric,
-    slice_fabric,
-    best_slice_geometry,
-    worst_slice_geometry,
-    assign_axes,
-    CollectiveCostModel,
-    AxisEmbedding,
-)
-from .allocation import (
-    JobRequest,
-    MachineState,
-    ElongatedPolicy,
-    IsoperimetricPolicy,
-    ListPolicy,
-    HintedPolicy,
-    simulate_queue,
-    avoidable_contention_ratio,
 )

@@ -18,7 +18,8 @@ import math
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from .torus import Geometry, Torus, canonical, factorizations, volume
+from repro.network.fabric import Torus
+from repro.network.geometry import Geometry, canonical, factorizations, volume
 
 MIDPLANE_DIMS: Geometry = (4, 4, 4, 4, 2)
 MIDPLANE_NODES: int = volume(MIDPLANE_DIMS)  # 512

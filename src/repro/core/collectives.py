@@ -1,331 +1,50 @@
-"""Collective cost model on torus fabrics — the paper's analysis, adapted to TPU.
+"""Deprecated shim — fabric + collective models now live in :mod:`repro.network`.
 
-Hardware adaptation (see DESIGN.md):  the paper analyses Blue Gene/Q, where a
-partition *always* retains wrap-around links (a partition of midplane geometry
-g is itself a torus).  TPU ICI differs in two ways:
-
-* a slice of a pod gets wrap-around links in a dimension only when it spans
-  that full dimension (no "partial wrap") — so partition geometry affects not
-  only face area but also *ring vs chain* topology per dimension;
-* a dimension of length 2 has a single link between the two chips, not the
-  Blue Gene/Q double link.
-
-Both are parameters of :class:`TorusFabric`.  The edge-isoperimetric insight
-is unchanged: the internal bisection of an allocated cuboid bounds the
-throughput of any bisection-crossing traffic, and elongated slices waste it.
-
-The model prices jax.lax collectives (all-reduce / all-gather /
-reduce-scatter / all-to-all / collective-permute) for a mesh axis embedded in
-the physical fabric, including the contention penalty of *strided* (folded)
-embeddings — this is what the roofline's collective term uses, and what the
-axis-assignment optimizer minimizes.
+The unified :class:`TorusFabric` (per-dimension wrap flags, BG/Q double-link
+vs TPU single-link conventions) is ``repro.network.fabric``; the collective
+cost model and axis assignment are ``repro.network.collectives``.  Existing
+imports keep working; new code should import from ``repro.network``
+directly.  See DESIGN.md.
 """
 
 from __future__ import annotations
 
-import itertools
-import math
-from dataclasses import dataclass, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from repro.network.fabric import (  # noqa: F401
+    DEFAULT_LINK_BW,
+    POD_DCI_BW,
+    TorusFabric,
+    best_slice_geometry,
+    slice_fabric,
+    worst_slice_geometry,
+)
+from repro.network.collectives import (  # noqa: F401
+    COLLECTIVE_TIME,
+    AxisAssignment,
+    AxisEmbedding,
+    CollectiveCostModel,
+    assign_axes,
+    collective_permute_time,
+    ring_all_gather_time,
+    ring_all_reduce_time,
+    ring_all_to_all_time,
+    ring_reduce_scatter_time,
+)
 
-from .torus import canonical, volume
-
-# TPU v5e-class constants (per chip / per link, bytes per second).
-DEFAULT_LINK_BW = 50e9  # ~50 GB/s per ICI link per direction (prompt spec)
-POD_DCI_BW = 12.5e9  # inter-pod (data-center network) per-chip share, est.
-
-
-@dataclass(frozen=True)
-class TorusFabric:
-    """A physical torus (or mesh) fabric: a pod, or an allocated slice."""
-
-    dims: Tuple[int, ...]
-    wrap: Tuple[bool, ...]  # wrap-around link present per dimension
-    link_bw: float = DEFAULT_LINK_BW  # bytes/s per link per direction
-    double_link_on_2: bool = False  # Blue Gene/Q: True, TPU: False
-
-    def __post_init__(self):
-        if len(self.dims) != len(self.wrap):
-            raise ValueError("dims and wrap must have equal length")
-
-    @property
-    def num_chips(self) -> int:
-        return volume(self.dims)
-
-    def links_across_dim(self, k: int) -> int:
-        """Links crossing a perpendicular plane of dimension k (per plane)."""
-        return self.num_chips // self.dims[k]
-
-    def bisection_links(self) -> int:
-        """Internal bisection in links: min over dimensions of the halving cut.
-
-        A wrapped dimension is cut in two places, an unwrapped (chain)
-        dimension in one; a length-2 wrapped dimension with double links
-        contributes 2 parallel links (BG/Q convention).
-        """
-        best = None
-        for k, a in enumerate(self.dims):
-            if a == 1:
-                continue
-            planes = 2 if (self.wrap[k] and a > 2) else 1
-            if a == 2 and self.wrap[k] and self.double_link_on_2:
-                planes = 2
-            cut = planes * self.links_across_dim(k)
-            best = cut if best is None else min(best, cut)
-        return 0 if best is None else best
-
-    def bisection_bandwidth(self) -> float:
-        """Bytes/s across the bisection, both directions of each link."""
-        return 2.0 * self.bisection_links() * self.link_bw
-
-
-def slice_fabric(pod: TorusFabric, geometry: Sequence[int]) -> TorusFabric:
-    """The fabric of a cuboid slice allocated from a pod.
-
-    TPU semantics: wrap in a dimension only where the slice covers the full
-    (wrapped) pod dimension.  Slice sides are matched to pod dims tightest-fit.
-    """
-    g = canonical(geometry)
-    g = g + (1,) * (len(pod.dims) - len(g))
-    if len(g) > len(pod.dims):
-        raise ValueError(f"slice {g} has more dims than pod {pod.dims}")
-    avail = sorted(range(len(pod.dims)), key=lambda i: pod.dims[i])
-    dims, wrap = [], []
-    used = set()
-    for side in g:
-        pick = None
-        for i in avail:
-            if i not in used and pod.dims[i] >= side:
-                pick = i
-                break
-        if pick is None:
-            raise ValueError(f"slice {g} does not fit in pod {pod.dims}")
-        used.add(pick)
-        dims.append(side)
-        wrap.append(pod.wrap[pick] and side == pod.dims[pick])
-    return TorusFabric(tuple(dims), tuple(wrap), pod.link_bw, pod.double_link_on_2)
-
-
-def best_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Tuple[int, ...], int]:
-    """Paper's core technique at the job level: among all cuboid slices of
-    the requested size that fit the pod, return the geometry with maximal
-    internal bisection (links), with ties broken toward balanced shapes."""
-    from .torus import Torus
-
-    best: Optional[Tuple[Tuple[int, ...], int]] = None
-    for g in Torus(pod.dims).sub_cuboids(chips):
-        fab = slice_fabric(pod, g)
-        b = fab.bisection_links()
-        if best is None or b > best[1] or (b == best[1] and g < best[0]):
-            best = (g, b)
-    if best is None:
-        raise ValueError(f"no cuboid slice of {chips} chips fits in pod {pod.dims}")
-    return best
-
-
-def worst_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Tuple[int, ...], int]:
-    from .torus import Torus
-
-    worst: Optional[Tuple[Tuple[int, ...], int]] = None
-    for g in Torus(pod.dims).sub_cuboids(chips):
-        fab = slice_fabric(pod, g)
-        b = fab.bisection_links()
-        if worst is None or b < worst[1] or (b == worst[1] and g > worst[0]):
-            worst = (g, b)
-    if worst is None:
-        raise ValueError(f"no cuboid slice of {chips} chips fits in pod {pod.dims}")
-    return worst
-
-
-# ---------------------------------------------------------------------------
-# Per-axis collective costs.
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class AxisEmbedding:
-    """How a logical mesh axis of size n is laid out on the fabric.
-
-    ``rings``   — number of independent bidirectional rings/chains the axis
-                  decomposes into (a 2D-embedded axis of size 16 on a 4x4
-                  face uses 1 snaked ring; an axis aligned with a physical
-                  dimension of size 16 across 16 rows uses 16 parallel rings
-                  is *not* how mesh axes work — each axis instance is one
-                  ring; parallelism across the other axes is implicit).
-    ``stride``  — physical hops per logical neighbour step (1 = contiguous;
-                  2 = every other chip, halving effective bandwidth).
-    ``wrapped`` — whether the embedded ring closes (torus ring) or is a chain.
-    """
-
-    size: int
-    stride: int = 1
-    wrapped: bool = True
-
-    @property
-    def ring_bw_factor(self) -> float:
-        """Effective per-direction bandwidth multiplier of the embedding."""
-        base = 1.0 / self.stride
-        return base
-
-
-def ring_all_gather_time(bytes_out: float, emb: AxisEmbedding, link_bw: float) -> float:
-    """Time to all-gather so each chip ends with ``bytes_out`` total
-    (each chip contributes bytes_out / n)."""
-    n = emb.size
-    if n <= 1:
-        return 0.0
-    shard = bytes_out / n
-    steps_bytes = shard * (n - 1)
-    directions = 2.0 if emb.wrapped else 1.0  # bidirectional exchange on a ring
-    return steps_bytes / (directions * link_bw * emb.ring_bw_factor)
-
-
-def ring_reduce_scatter_time(bytes_in: float, emb: AxisEmbedding, link_bw: float) -> float:
-    """Time to reduce-scatter a per-chip buffer of ``bytes_in``."""
-    n = emb.size
-    if n <= 1:
-        return 0.0
-    shard = bytes_in / n
-    steps_bytes = shard * (n - 1)
-    directions = 2.0 if emb.wrapped else 1.0
-    return steps_bytes / (directions * link_bw * emb.ring_bw_factor)
-
-
-def ring_all_reduce_time(bytes_in: float, emb: AxisEmbedding, link_bw: float) -> float:
-    """Bandwidth-optimal all-reduce = reduce-scatter + all-gather."""
-    return ring_reduce_scatter_time(bytes_in, emb, link_bw) + ring_all_gather_time(
-        bytes_in, emb, link_bw
-    )
-
-
-def ring_all_to_all_time(bytes_in: float, emb: AxisEmbedding, link_bw: float) -> float:
-    """All-to-all of a per-chip buffer of ``bytes_in`` over the axis.
-
-    Ring all-to-all is bisection-bound: max directed-link load is
-    bytes_in/n * n^2/8 (ties split) on a wrapped ring, n^2/4 on a chain.
-    """
-    n = emb.size
-    if n <= 1:
-        return 0.0
-    per_peer = bytes_in / n
-    if emb.wrapped:
-        load = per_peer * n * n / 8.0
-    else:
-        load = per_peer * n * n / 4.0
-    return load / (link_bw * emb.ring_bw_factor)
-
-
-def collective_permute_time(bytes_in: float, emb: AxisEmbedding, link_bw: float) -> float:
-    """Neighbour shift along the axis (pipelining / ring matmul step)."""
-    return bytes_in * emb.stride / link_bw
-
-
-COLLECTIVE_TIME = {
-    "all-reduce": ring_all_reduce_time,
-    "all-gather": ring_all_gather_time,
-    "reduce-scatter": ring_reduce_scatter_time,
-    "all-to-all": ring_all_to_all_time,
-    "collective-permute": collective_permute_time,
-}
-
-
-# ---------------------------------------------------------------------------
-# Axis assignment: mapping logical mesh axes onto physical torus dimensions.
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class AxisAssignment:
-    """Assignment of each logical axis to an ordered group of physical dims."""
-
-    axis_names: Tuple[str, ...]
-    axis_sizes: Tuple[int, ...]
-    phys_groups: Tuple[Tuple[int, ...], ...]  # indices into fabric.dims
-    embeddings: Tuple[AxisEmbedding, ...]
-
-    def embedding(self, axis: str) -> AxisEmbedding:
-        return self.embeddings[self.axis_names.index(axis)]
-
-
-def assign_axes(
-    fabric: TorusFabric,
-    axis_sizes: Dict[str, int],
-    order_hint: Optional[Sequence[str]] = None,
-) -> AxisAssignment:
-    """Greedy optimal-by-construction assignment of mesh axes to physical dims.
-
-    Each axis must occupy a set of whole physical dimensions whose product is
-    the axis size (the jax device-mesh reshape constraint).  Axes earlier in
-    ``order_hint`` (default: larger collective pressure ≈ larger axis first)
-    get contiguous, wrapped dimensions first.  An axis spanning multiple
-    physical dims is embedded as a snake: wrapped iff all its dims wrap, and
-    contiguous (stride 1) because the snake traverses physically adjacent
-    chips.
-    """
-    names = list(order_hint) if order_hint else sorted(
-        axis_sizes, key=lambda a: -axis_sizes[a]
-    )
-    if set(names) != set(axis_sizes):
-        raise ValueError("order_hint must cover exactly the axis names")
-    remaining = list(range(len(fabric.dims)))
-    groups: Dict[str, Tuple[int, ...]] = {}
-    for name in names:
-        size = axis_sizes[name]
-        if size == 1:
-            groups[name] = ()
-            continue
-        got = _find_dim_group(fabric, remaining, size)
-        if got is None:
-            raise ValueError(
-                f"axis {name}={size} cannot be embedded in remaining dims "
-                f"{[fabric.dims[i] for i in remaining]} of fabric {fabric.dims}"
-            )
-        groups[name] = got
-        for i in got:
-            remaining.remove(i)
-    embeddings = {}
-    for name in names:
-        size = axis_sizes[name]
-        dims = groups[name]
-        wrapped = all(fabric.wrap[i] for i in dims) if dims else True
-        embeddings[name] = AxisEmbedding(size=size, stride=1, wrapped=wrapped)
-    ordered = tuple(axis_sizes.keys())
-    return AxisAssignment(
-        axis_names=ordered,
-        axis_sizes=tuple(axis_sizes[n] for n in ordered),
-        phys_groups=tuple(groups[n] for n in ordered),
-        embeddings=tuple(embeddings[n] for n in ordered),
-    )
-
-
-def _find_dim_group(
-    fabric: TorusFabric, remaining: List[int], size: int
-) -> Optional[Tuple[int, ...]]:
-    """Smallest group of remaining physical dims whose product equals size,
-    preferring wrapped dims (ring > chain for collectives)."""
-    for k in range(1, len(remaining) + 1):
-        candidates = []
-        for combo in itertools.combinations(remaining, k):
-            if math.prod(fabric.dims[i] for i in combo) == size:
-                n_wrapped = sum(bool(fabric.wrap[i]) for i in combo)
-                candidates.append((-n_wrapped, combo))
-        if candidates:
-            return min(candidates)[1]
-    return None
-
-
-@dataclass
-class CollectiveCostModel:
-    """Prices collectives for a mesh built on a fabric with an assignment."""
-
-    fabric: TorusFabric
-    assignment: AxisAssignment
-
-    def time(self, collective: str, axis: str, bytes_in: float) -> float:
-        emb = self.assignment.embedding(axis)
-        fn = COLLECTIVE_TIME[collective]
-        return fn(bytes_in, emb, self.fabric.link_bw)
-
-    def effective_axis_bandwidth(self, axis: str) -> float:
-        """Algorithmic bandwidth of an all-gather over the axis (bytes/s)."""
-        emb = self.assignment.embedding(axis)
-        if emb.size <= 1:
-            return math.inf
-        t = ring_all_gather_time(1.0, emb, self.fabric.link_bw)
-        return 1.0 / t
+__all__ = [
+    "COLLECTIVE_TIME",
+    "DEFAULT_LINK_BW",
+    "POD_DCI_BW",
+    "AxisAssignment",
+    "AxisEmbedding",
+    "CollectiveCostModel",
+    "TorusFabric",
+    "assign_axes",
+    "best_slice_geometry",
+    "collective_permute_time",
+    "ring_all_gather_time",
+    "ring_all_reduce_time",
+    "ring_all_to_all_time",
+    "ring_reduce_scatter_time",
+    "slice_fabric",
+    "worst_slice_geometry",
+]

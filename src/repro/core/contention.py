@@ -1,257 +1,45 @@
-"""Link-level contention model for torus partitions (paper Section 4.1).
+"""Deprecated shim — the contention model now lives in :mod:`repro.network`.
 
-Models dimension-ordered minimal routing (DOR) on a torus partition and
-computes per-directed-link loads for a traffic pattern.  The completion time
-of a bulk-synchronous communication phase is estimated as
-
-    T = max_link_load / link_bandwidth
-
-which is exact for the bisection-pairing benchmark of the paper (each node
-exchanges fixed-size messages with the node at maximal hop distance) and a
-good model for any contention-bound pattern.
-
-Two implementations are provided:
-
-* ``LinkLoads`` — exact per-link accounting for arbitrary (src, dst, volume)
-  traffic, used for validation on small tori.
-* ``uniform_offset_max_load`` — O(D) closed form for translation-invariant
-  patterns (every node sends to ``node + offset``), exact by symmetry.
-  The bisection-pairing pattern is the special case offset = dims/2.
-
-Tie-breaking: when the hop distance along a ring is exactly half the ring
-length, minimal routing may use either direction.  ``split_ties=True``
-(default) splits the volume evenly — this models BG/Q's and TPU ICI's
-adaptive/balanced routing and is what the paper's predictions assume.
+The link-load engine is ``repro.network.routing`` (vectorized; the old
+per-hop walker survives only as a test reference under
+``tests/reference_dor.py``) and the traffic builders are
+``repro.network.patterns``.  Existing imports keep working; new code should
+import from ``repro.network`` directly.  See DESIGN.md.
 """
 
 from __future__ import annotations
 
-import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Tuple
+from repro.network.routing import (  # noqa: F401
+    LinkLoads,
+    PairingPrediction,
+    all_to_all_max_load,
+    max_link_load,
+    pairing_speedup,
+    predict_pairing_time,
+    route_dor,
+    simulate_pattern,
+    uniform_offset_max_load,
+)
+from repro.network.patterns import (  # noqa: F401
+    bisection_pairing,
+    furthest_offset,
+    pairing_pairs,
+)
 
-import numpy as np
+Coord = tuple
 
-from .torus import canonical, volume
-
-Coord = Tuple[int, ...]
-
-
-@dataclass
-class LinkLoads:
-    """Exact directed-link load accounting on a torus under DOR routing."""
-
-    dims: Tuple[int, ...]
-    split_ties: bool = True
-    # loads[k][d] has the torus shape; entry v = volume on the link leaving
-    # vertex v in dimension k, direction d (0: +1, 1: -1).
-    loads: List[List[np.ndarray]] = field(init=False)
-
-    def __post_init__(self):
-        self.dims = tuple(int(a) for a in self.dims)
-        self.loads = [
-            [np.zeros(self.dims, dtype=np.float64) for _ in range(2)]
-            for _ in range(len(self.dims))
-        ]
-
-    def add_path(self, src: Coord, dst: Coord, vol: float) -> None:
-        """Route vol from src to dst with dimension-ordered minimal routing."""
-        cur = list(src)
-        for k, a in enumerate(self.dims):
-            if a == 1:
-                continue
-            delta = (dst[k] - cur[k]) % a
-            if delta == 0:
-                continue
-            if delta < a - delta:
-                self._walk(cur, k, +1, delta, vol)
-            elif delta > a - delta:
-                self._walk(cur, k, -1, a - delta, vol)
-            else:  # tie: distance exactly a/2
-                if self.split_ties:
-                    self._walk(list(cur), k, +1, delta, vol / 2.0)
-                    self._walk(cur, k, -1, delta, vol / 2.0)
-                else:
-                    self._walk(cur, k, +1, delta, vol)
-            cur[k] = dst[k]
-
-    def _walk(self, cur: List[int], k: int, direction: int, hops: int, vol: float) -> None:
-        a = self.dims[k]
-        pos = list(cur)
-        for _ in range(hops):
-            if direction > 0:
-                self.loads[k][0][tuple(pos)] += vol
-                pos[k] = (pos[k] + 1) % a
-            else:
-                self.loads[k][1][tuple(pos)] += vol
-                pos[k] = (pos[k] - 1) % a
-
-    def max_load(self) -> float:
-        """Maximum load on any directed link.
-
-        Dimensions of length 2 have *two* physical links between each vertex
-        pair (the Blue Gene/Q double-link convention); traffic is balanced
-        across them, halving the effective load.
-        """
-        m = 0.0
-        for k, a in enumerate(self.dims):
-            if a == 1:
-                continue
-            scale = 0.5 if a == 2 else 1.0
-            for d in range(2):
-                m = max(m, scale * float(self.loads[k][d].max()))
-        return m
-
-    def total_hop_volume(self) -> float:
-        return float(sum(arr.sum() for pair in self.loads for arr in pair))
-
-
-def uniform_offset_max_load(
-    dims: Sequence[int], offset: Sequence[int], vol: float = 1.0, split_ties: bool = True
-) -> float:
-    """Max directed-link load when every vertex sends vol to vertex+offset.
-
-    By translation symmetry the load is uniform per (dimension, direction):
-    an offset of delta on a ring of length a loads each link of the chosen
-    direction with ``vol * min(delta, a-delta)`` (halved when the tie is
-    split, and halved again on double links, a == 2).
-    """
-    m = 0.0
-    for a, off in zip(dims, offset):
-        if a == 1:
-            continue
-        delta = off % a
-        if delta == 0:
-            continue
-        d = min(delta, a - delta)
-        load = vol * d
-        if 2 * d == a and split_ties:
-            load /= 2.0
-        if a == 2:
-            load /= 2.0  # double link
-        m = max(m, load)
-    return m
-
-
-# ---------------------------------------------------------------------------
-# Paper experiment A: the bisection-pairing benchmark.
-# ---------------------------------------------------------------------------
-def furthest_offset(dims: Sequence[int]) -> Tuple[int, ...]:
-    """The maximal-hop-distance offset (pairs each node with its antipode)."""
-    return tuple(a // 2 for a in dims)
-
-
-def pairing_pairs(dims: Sequence[int]) -> List[Tuple[Coord, Coord]]:
-    """Explicit furthest-node pairing (for the exact simulator)."""
-    dims = tuple(dims)
-    off = furthest_offset(dims)
-    pairs = []
-    seen = set()
-    for v in itertools.product(*(range(a) for a in dims)):
-        w = tuple((v[k] + off[k]) % a for k, a in enumerate(dims))
-        key = frozenset((v, w))
-        if key in seen:
-            continue
-        seen.add(key)
-        pairs.append((v, w))
-    return pairs
-
-
-@dataclass(frozen=True)
-class PairingPrediction:
-    dims: Tuple[int, ...]
-    max_link_load: float  # per unit message volume
-    time_per_volume: float  # seconds per byte of per-pair message volume
-    bisection_links: int
-
-
-def predict_pairing_time(
-    dims: Sequence[int],
-    message_bytes: float,
-    link_bw_bytes_s: float,
-    split_ties: bool = True,
-) -> PairingPrediction:
-    """Predicted completion time of one round of the pairing benchmark."""
-    from .torus import Torus
-
-    dims = canonical(dims)
-    off = furthest_offset(dims)
-    load = uniform_offset_max_load(dims, off, 1.0, split_ties=split_ties)
-    return PairingPrediction(
-        dims=dims,
-        max_link_load=load,
-        time_per_volume=load / link_bw_bytes_s,
-        bisection_links=Torus(dims).bisection_links(),
-    )
-
-
-def pairing_speedup(
-    dims_a: Sequence[int], dims_b: Sequence[int], split_ties: bool = True
-) -> float:
-    """Predicted execution-time ratio T(a) / T(b) of the pairing benchmark
-    between two equal-size partition geometries (paper Figures 3-4)."""
-    a = predict_pairing_time(dims_a, 1.0, 1.0, split_ties)
-    b = predict_pairing_time(dims_b, 1.0, 1.0, split_ties)
-    return a.max_link_load / b.max_link_load
-
-
-# ---------------------------------------------------------------------------
-# Generic traffic patterns for policy evaluation.
-# ---------------------------------------------------------------------------
-def simulate_pattern(
-    dims: Sequence[int],
-    traffic: Iterable[Tuple[Coord, Coord, float]],
-    split_ties: bool = True,
-) -> LinkLoads:
-    ll = LinkLoads(tuple(dims), split_ties=split_ties)
-    for src, dst, vol in traffic:
-        ll.add_path(src, dst, vol)
-    return ll
-
-
-def all_to_all_max_load(dims: Sequence[int], vol_per_pair: float = 1.0) -> float:
-    """Max link load of a full all-to-all (every ordered pair exchanges
-    vol_per_pair), computed analytically for DOR with balanced tie-splitting.
-
-    On a ring of length a, all-to-all loads each directed link with
-    a^2/8 * vol per ring (even a); embedded in a torus, multiply by the
-    number of (src, dst) column pairs sharing the ring: prod of other dims
-    for the source hyperplane times... we compute per dimension k:
-        load_k = (number of messages whose dim-k segment uses a given link)
-    For DOR, messages with arbitrary coordinates in dims > k (not yet
-    routed) and dst coordinates in dims < k share dim-k rings uniformly.
-    Total messages crossing a dim-k directed link: N^2/(a_k) * (a_k^2/8)/N
-    ... by symmetry the max is identical for all links in a dimension, so we
-    compute it exactly by counting hop-volume per dimension.
-    """
-    dims = tuple(dims)
-    n = volume(dims)
-    worst = 0.0
-    for k, a in enumerate(dims):
-        if a == 1:
-            continue
-        # Sum over delta of min-hop distance, ties split evenly.
-        # hop_volume per (ring, direction) for one full all-to-all among the
-        # a nodes of a ring = sum_delta dist(delta) * a / 2 per direction.
-        per_ring_dir = 0.0
-        for delta in range(1, a):
-            d = min(delta, a - delta)
-            if 2 * d == a:
-                per_ring_dir += a * d / 2.0  # split across the two directions
-            elif delta < a - delta:
-                per_ring_dir += a * d  # + direction only; symmetric overall
-        # Each ordered pair of "columns" (same ring) contributes; number of
-        # messages sharing a given dim-k ring = n^2 / (a * n) * ... simpler:
-        # every message routes its full dim-k distance on exactly one ring;
-        # total dim-k hop volume = n^2 * avg_dist_k; divided evenly over
-        # (n/a) rings * a links * 2 directions.
-        total_pairs = n * n
-        avg_dist = sum(min(d, a - d) for d in range(a)) / a
-        total_hop_volume = total_pairs * avg_dist * vol_per_pair
-        links = (n // a) * a * 2  # directed links in dimension k
-        load = total_hop_volume / links
-        if a == 2:
-            load /= 2.0  # double links
-        worst = max(worst, load)
-    return worst
+__all__ = [
+    "Coord",
+    "LinkLoads",
+    "PairingPrediction",
+    "all_to_all_max_load",
+    "bisection_pairing",
+    "furthest_offset",
+    "max_link_load",
+    "pairing_pairs",
+    "pairing_speedup",
+    "predict_pairing_time",
+    "route_dor",
+    "simulate_pattern",
+    "uniform_offset_max_load",
+]

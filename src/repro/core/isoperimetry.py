@@ -23,7 +23,8 @@ import math
 from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
-from .torus import Geometry, Torus, canonical, volume
+from repro.network.fabric import Torus
+from repro.network.geometry import Geometry, canonical, theorem31_bound, volume
 
 
 def bollobas_leader_bound(n: int, D: int, t: int) -> float:
@@ -39,28 +40,8 @@ def bollobas_leader_bound(n: int, D: int, t: int) -> float:
     return best
 
 
-def theorem31_bound(dims: Sequence[int], t: int) -> float:
-    """Theorem 3.1: the generalized edge-isoperimetric lower bound.
-
-    ``dims`` are the torus dimension lengths (any order; canonicalised to
-    a_1 >= a_2 >= ... >= a_D).  For a cuboid S with |S| = t:
-
-        |E(S, S̄)| >= min_{r in 0..D-1}
-            2 (D - r) * (prod of the r smallest dims)^(1/(D-r)) * t^((D-r-1)/(D-r))
-    """
-    a = canonical(dims)
-    n = volume(a)
-    if t < 0 or t > n // 2:
-        raise ValueError(f"t must satisfy 0 <= t <= |V|/2 = {n // 2}, got {t}")
-    if t == 0:
-        return 0.0
-    D = len(a)
-    best = math.inf
-    for r in range(D):
-        k = math.prod(a[D - r:]) if r > 0 else 1  # product of r smallest dims
-        val = 2.0 * (D - r) * k ** (1.0 / (D - r)) * t ** ((D - r - 1.0) / (D - r))
-        best = min(best, val)
-    return best
+# theorem31_bound is implemented once in repro.network.geometry (it also
+# backs the odd-dimension bisection fallback there) and re-exported here.
 
 
 def lemma32_cut(dims: Sequence[int], t: int, r: int) -> Optional[Tuple[Geometry, int]]:

@@ -21,7 +21,7 @@ import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
-from .torus import canonical, volume
+from repro.network.geometry import canonical, volume
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +140,7 @@ class HyperX:
 
     def best_subproduct(self, t: int) -> Optional[Tuple[Tuple[int, ...], int]]:
         """Minimum-cut sub-product of size t (allocation-friendly partitions)."""
-        from .torus import factorizations
+        from repro.network.geometry import factorizations
 
         best = None
         for s in set(factorizations(t, len(self.clique_sizes))):

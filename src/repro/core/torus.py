@@ -1,301 +1,34 @@
-"""Torus network graphs and cuboid partition geometry.
+"""Deprecated shim — torus geometry now lives in :mod:`repro.network`.
 
-This module models D-dimensional torus networks (the Blue Gene/Q 5D torus,
-TPU 2D/3D ICI tori, ...) and the cuboid sub-torus partitions that processor
-allocation policies carve out of them.  It provides exact edge counting for
-cuboid subsets — the primitive underlying the edge-isoperimetric analysis of
-Oltchik & Schwartz, "Network Partitioning and Avoidable Contention" (2020).
-
-Conventions
------------
-* A torus is described by its dimension lengths ``dims = (a_1, ..., a_D)``.
-* Geometries are canonicalised in *sorted descending* order, matching the
-  paper's canonical representation (partitions identical up to rotation are
-  treated as one).
-* A dimension of length 2 is a *double link*: both the +1 and -1 neighbour
-  coincide, contributing two parallel edges.  This matches the physical
-  Blue Gene/Q construction and the edge-counting in the paper.
-* Dimensions of length 1 contribute no edges (self-loops are excluded).
+This module re-exports the historical ``repro.core.torus`` API from its new
+homes (``repro.network.geometry`` for the pure geometry primitives,
+``repro.network.fabric`` for the :class:`Torus` wrapper).  Existing imports
+keep working; new code should import from ``repro.network`` directly.
+See DESIGN.md for the deprecation path.
 """
 
 from __future__ import annotations
 
-import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Iterable, Iterator, Sequence, Tuple
+from repro.network.geometry import (  # noqa: F401
+    ExplicitTorus,
+    Geometry,
+    all_divisor_geometries,
+    canonical,
+    degree_contribution,
+    enumerate_vertices,
+    factorizations,
+    volume,
+)
+from repro.network.fabric import Torus  # noqa: F401
 
-Geometry = Tuple[int, ...]
-
-
-def canonical(dims: Iterable[int]) -> Geometry:
-    """Sorted-descending canonical form of a torus/cuboid geometry."""
-    out = tuple(sorted((int(d) for d in dims), reverse=True))
-    if any(d < 1 for d in out):
-        raise ValueError(f"dimension lengths must be >= 1, got {out}")
-    return out
-
-
-def volume(dims: Iterable[int]) -> int:
-    return math.prod(dims)
-
-
-def degree_contribution(length: int) -> int:
-    """Edges incident to a vertex along one torus dimension of given length."""
-    if length == 1:
-        return 0
-    return 2  # length==2 is a double link; still two edge-endpoints per vertex.
-
-
-@dataclass(frozen=True)
-class Torus:
-    """A D-dimensional torus graph with arbitrary dimension lengths."""
-
-    dims: Geometry
-
-    def __init__(self, dims: Iterable[int]):
-        object.__setattr__(self, "dims", canonical(dims))
-
-    # -- basic graph quantities ------------------------------------------------
-    @property
-    def D(self) -> int:
-        return len(self.dims)
-
-    @property
-    def num_vertices(self) -> int:
-        return volume(self.dims)
-
-    @property
-    def degree(self) -> int:
-        return sum(degree_contribution(a) for a in self.dims)
-
-    @property
-    def num_edges(self) -> int:
-        # Each dimension of length a>2 contributes a ring of `a` edges per line;
-        # length 2 contributes a double edge (2 edges) per line; length 1 none.
-        total = 0
-        n = self.num_vertices
-        for a in self.dims:
-            if a == 1:
-                continue
-            lines = n // a
-            edges_per_line = a if a > 2 else 2
-            total += lines * edges_per_line
-        return total
-
-    # -- cuboid subsets ---------------------------------------------------------
-    def contains_cuboid(self, cuboid: Sequence[int]) -> bool:
-        """Whether a cuboid geometry fits in this torus (up to rotation)."""
-        c = canonical(cuboid)
-        if len(c) > self.D:
-            return False
-        c = c + (1,) * (self.D - len(c))
-        # Greedy matching on sorted-descending lists is exact here: match the
-        # largest cuboid side to the smallest torus side that still fits.
-        avail = list(self.dims)
-        for side in c:
-            candidates = [i for i, a in enumerate(avail) if a >= side]
-            if not candidates:
-                return False
-            # Use the tightest fit to keep larger torus dims free.
-            best = min(candidates, key=lambda i: avail[i])
-            avail.pop(best)
-        return True
-
-    def cuboid_cut(self, cuboid: Sequence[int]) -> int:
-        """|E(S, S̄)| for a cuboid subset S, counting double links for a_i == 2.
-
-        A cuboid side s_i embedded in torus dimension a_i contributes:
-          * 0 edges if s_i == a_i (the dimension is fully covered; wrap-around
-            links are internal),
-          * 2 * |S| / s_i edges otherwise (one +face and one -face, which is
-            also exact for s_i == 1 whether or not a_i == 2, by the
-            double-link convention).
-
-        The cut depends on which torus dimension each side is embedded in
-        (only via full coverage); we return the minimum over all feasible
-        embeddings, which is the cut of the canonical geometry.
-        """
-        c = list(canonical(cuboid))
-        if len(c) > self.D:
-            raise ValueError(f"cuboid {c} has more dims than torus {self.dims}")
-        c = c + [1] * (self.D - len(c))
-        if not self.contains_cuboid(c):
-            raise ValueError(f"cuboid {tuple(c)} does not fit in torus {self.dims}")
-        size = volume(c)
-        best = None
-        for perm in set(itertools.permutations(c)):
-            if any(s > a for s, a in zip(perm, self.dims)):
-                continue
-            cut = sum(2 * size // s for s, a in zip(perm, self.dims) if s != a)
-            best = cut if best is None else min(best, cut)
-        assert best is not None
-        return best
-
-    def cuboid_cut_aligned(self, sides: Sequence[int]) -> int:
-        """Cut of a cuboid with side i embedded along torus dimension i
-        (no canonicalisation — for validation against explicit placements)."""
-        s = tuple(sides) + (1,) * (self.D - len(tuple(sides)))
-        if any(x > a for x, a in zip(s, self.dims)):
-            raise ValueError(f"aligned cuboid {s} does not fit in {self.dims}")
-        size = volume(s)
-        return sum(2 * size // x for x, a in zip(s, self.dims) if x != a)
-
-    def _assign(self, cuboid_sides: Sequence[int]) -> list[tuple[int, int]]:
-        """Match each cuboid side to a torus dimension (tightest fit)."""
-        avail = list(self.dims)
-        out = []
-        for side in sorted(cuboid_sides, reverse=True):
-            candidates = [i for i, a in enumerate(avail) if a >= side]
-            if not candidates:
-                raise ValueError(f"cuboid {cuboid_sides} does not fit in {self.dims}")
-            best = min(candidates, key=lambda i: avail[i])
-            out.append((side, avail.pop(best)))
-        return out
-
-    def cuboid_interior(self, cuboid: Sequence[int]) -> int:
-        """|E(S, S)| for a cuboid subset, via the regularity identity (Eq. 1):
-        k*|S| = 2|E(S,S)| + |E(S, S̄)| for a k-regular graph."""
-        c = canonical(tuple(cuboid) + (1,) * (self.D - len(tuple(cuboid))))
-        size = volume(c)
-        k = self.degree
-        cut = self.cuboid_cut(c)
-        twice_interior = k * size - cut
-        assert twice_interior % 2 == 0
-        return twice_interior // 2
-
-    # -- enumeration -------------------------------------------------------------
-    def sub_cuboids(self, size: int) -> Iterator[Geometry]:
-        """All canonical cuboid geometries of a given vertex count that fit."""
-        seen = set()
-        for c in factorizations(size, self.D):
-            if c in seen:
-                continue
-            seen.add(c)
-            if self.contains_cuboid(c):
-                yield c
-
-    def bisection_links(self) -> int:
-        """Internal bisection bandwidth of this torus in links (capacity 1).
-
-        By the edge-isoperimetric bound the minimum bisection of a torus with
-        an even-length longest dimension is attained by halving the longest
-        dimension: 2 * N / L links (the paper's Blue Gene/Q formula).
-        For an odd longest dimension we take floor(N/2)-sized near-halves and
-        search cuboids exactly.
-        """
-        n = self.num_vertices
-        if n == 1:
-            return 0
-        L = self.dims[0]
-        if L % 2 == 0:
-            return 2 * n // L
-        if L == 1:
-            return 0
-        # Odd longest dimension: exact search over cuboids of size floor(n/2),
-        # falling back to the analytic bound when no cuboid has that size.
-        target = n // 2
-        best = None
-        for c in self.sub_cuboids(target):
-            cut = self.cuboid_cut(c)
-            best = cut if best is None else min(best, cut)
-        if best is None:
-            # No cuboid of size exactly floor(n/2) exists; use the analytic
-            # isoperimetric lower bound (conservative for reporting).
-            from .isoperimetry import theorem31_bound  # local import, no cycle at module load
-
-            best = math.ceil(theorem31_bound(self.dims, target))
-        return best
-
-
-def factorizations(n: int, max_parts: int) -> Iterator[Geometry]:
-    """All multisets of <= max_parts integers >= 1 whose product is n.
-
-    Yields canonical (sorted descending) tuples padded to max_parts with 1s.
-    """
-
-    def rec(remaining: int, max_factor: int, parts: Tuple[int, ...]) -> Iterator[Tuple[int, ...]]:
-        if len(parts) == max_parts:
-            if remaining == 1:
-                yield parts
-            return
-        # next factor f <= max_factor, f divides remaining
-        for f in range(min(remaining, max_factor), 0, -1):
-            if remaining % f == 0:
-                yield from rec(remaining // f, f, parts + (f,))
-
-    for combo in rec(n, n, ()):  # descending by construction
-        yield combo
-
-
-def all_divisor_geometries(n: int, D: int) -> list[Geometry]:
-    return sorted(set(factorizations(n, D)), reverse=True)
-
-
-def enumerate_vertices(dims: Sequence[int]) -> Iterator[Tuple[int, ...]]:
-    yield from itertools.product(*(range(a) for a in dims))
-
-
-@dataclass
-class ExplicitTorus:
-    """Small explicit torus used for brute-force validation in tests.
-
-    Unlike :class:`Torus`, this builds vertex/edge sets explicitly, so that
-    cut counting for *arbitrary* (non-cuboid) subsets can be cross-checked.
-    Multi-edges for length-2 dimensions are honoured.
-    """
-
-    dims: Tuple[int, ...]
-    _edges: list[tuple[Tuple[int, ...], Tuple[int, ...]]] = field(default_factory=list)
-
-    def __post_init__(self):
-        self.dims = tuple(int(d) for d in self.dims)
-        edges = []
-        for v in enumerate_vertices(self.dims):
-            for k, a in enumerate(self.dims):
-                if a == 1:
-                    continue
-                w = list(v)
-                w[k] = (v[k] + 1) % a
-                w = tuple(w)
-                edges.append((v, w))
-                if a == 2 and v[k] == 0:
-                    edges.append((v, w))  # double link
-        # every undirected edge appended once per +1 step; for a>2 this counts
-        # each ring edge exactly once, for a==2 the pair (0,1) gets two edges.
-        if any(a == 2 for a in self.dims):
-            # For a==2 dims: v[k]=0 appends (0->1) twice, v[k]=1 appends (1->0)
-            # once == duplicate of (0,1). Filter: keep edges from v[k]<w[k] side.
-            filt = []
-            for (v, w) in edges:
-                ks = [k for k in range(len(self.dims)) if v[k] != w[k]]
-                k = ks[0]
-                if self.dims[k] == 2 and v[k] != 0:
-                    continue
-                filt.append((v, w))
-            edges = filt
-        self._edges = edges
-
-    @property
-    def num_vertices(self) -> int:
-        return volume(self.dims)
-
-    @property
-    def num_edges(self) -> int:
-        return len(self._edges)
-
-    def cut(self, subset: Iterable[Tuple[int, ...]]) -> int:
-        s = set(subset)
-        return sum(1 for (v, w) in self._edges if (v in s) != (w in s))
-
-    def interior(self, subset: Iterable[Tuple[int, ...]]) -> int:
-        s = set(subset)
-        return sum(1 for (v, w) in self._edges if v in s and w in s)
-
-    def cuboid_vertices(self, cuboid: Sequence[int]) -> list[Tuple[int, ...]]:
-        c = tuple(cuboid) + (1,) * (len(self.dims) - len(tuple(cuboid)))
-        # place cuboid at origin, side i along dim i (caller aligns sides)
-        for side, a in zip(c, self.dims):
-            if side > a:
-                raise ValueError(f"{c} does not fit in {self.dims} as aligned")
-        return list(itertools.product(*(range(s) for s in c)))
+__all__ = [
+    "ExplicitTorus",
+    "Geometry",
+    "Torus",
+    "all_divisor_geometries",
+    "canonical",
+    "degree_contribution",
+    "enumerate_vertices",
+    "factorizations",
+    "volume",
+]

@@ -1,0 +1,7 @@
+"""Version compatibility for Pallas TPU APIs shared by all kernel modules."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this version provides.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _rwkv6_kernel(
     r_ref, k_ref, v_ref, lw_ref, u_ref,  # (Q,P) tiles; u: (P,)
@@ -117,7 +119,7 @@ def rwkv6_chunked_hmajor(
             jax.ShapeDtypeStruct((B, H, P, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -233,7 +233,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, force: bool = Fals
                 mem_dict[attr] = int(getattr(mem, attr))
             except Exception:
                 pass
-    raw_cost = compiled.cost_analysis() or {}
+    raw_cost = roofline.xla_cost_analysis(compiled)
     prod_stats = roofline.collective_stats(compiled.as_text())
 
     # -- 2) collective calibration: unrolled depths L0 < L1 ----------------------

@@ -27,7 +27,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
-from repro.core.collectives import (
+from repro.network import (
     AxisAssignment,
     CollectiveCostModel,
     TorusFabric,
@@ -35,9 +35,8 @@ from repro.core.collectives import (
     best_slice_geometry,
     slice_fabric,
     worst_slice_geometry,
-    DEFAULT_LINK_BW,
-    POD_DCI_BW,
 )
+from repro.network.fabric import DEFAULT_LINK_BW, POD_DCI_BW
 
 # TPU v5e-class pod: 16x16 torus, wrapped in both dimensions.
 POD_DIMS = (16, 16)

@@ -1,0 +1,96 @@
+"""repro.network — the unified torus fabric modeling subsystem.
+
+Single home of every geometry / fabric / routing primitive in the repo
+(see DESIGN.md):
+
+  geometry    — canonical geometries, factorizations, exact cuboid cut and
+                interior counts, exact bisection search, ExplicitTorus.
+  fabric      — the unified TorusFabric (per-dimension wrap flags, BG/Q
+                double-link vs TPU single-link conventions), Torus compat
+                wrapper, slice planning.
+  routing     — vectorized NumPy DOR link-load engine, closed-form
+                translation-invariant fast paths, pairing predictions.
+  patterns    — traffic-pattern library (bisection pairing, all-to-all,
+                halo exchange, ring collectives, permutations, transpose).
+  collectives — jax.lax collective cost model + mesh-axis assignment.
+  allocation  — partition allocation policies and the queue simulator.
+
+The historical ``repro.core.{torus,contention,collectives,allocation}``
+modules re-export from here and are deprecated.
+"""
+
+from .geometry import (
+    ExplicitTorus,
+    Geometry,
+    all_divisor_geometries,
+    canonical,
+    contains_cuboid,
+    cuboid_cut,
+    cuboid_cut_aligned,
+    cuboid_interior,
+    degree_contribution,
+    enumerate_vertices,
+    factorizations,
+    sub_cuboids,
+    volume,
+)
+from .geometry import bisection_links as torus_bisection_links
+from .fabric import (
+    DEFAULT_LINK_BW,
+    POD_DCI_BW,
+    Torus,
+    TorusFabric,
+    best_slice_geometry,
+    slice_fabric,
+    worst_slice_geometry,
+)
+from .routing import (
+    LinkLoads,
+    PairingPrediction,
+    all_to_all_max_load,
+    max_link_load,
+    pairing_speedup,
+    predict_pairing_time,
+    route_dor,
+    simulate_pattern,
+    uniform_offset_max_load,
+)
+from .patterns import (
+    all_to_all,
+    bisection_pairing,
+    furthest_offset,
+    nearest_neighbor_halo,
+    pairing_pairs,
+    random_permutation,
+    ring_all_gather,
+    ring_shift,
+    transpose,
+    uniform_shift,
+    vertices,
+)
+from .collectives import (
+    AxisAssignment,
+    AxisEmbedding,
+    COLLECTIVE_TIME,
+    CollectiveCostModel,
+    assign_axes,
+    collective_permute_time,
+    ring_all_gather_time,
+    ring_all_reduce_time,
+    ring_all_to_all_time,
+    ring_reduce_scatter_time,
+)
+from .allocation import (
+    AllocationPolicy,
+    ElongatedPolicy,
+    HintedPolicy,
+    IsoperimetricPolicy,
+    JobRequest,
+    ListPolicy,
+    MachineState,
+    Placement,
+    ScheduledJob,
+    SimulationResult,
+    avoidable_contention_ratio,
+    simulate_queue,
+)

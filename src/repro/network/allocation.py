@@ -1,0 +1,279 @@
+"""Processor-allocation policies with isoperimetric partition selection.
+
+This is the paper's contribution turned into a deployable scheduler
+component: given a machine fabric (a torus of allocation units — midplanes
+on Blue Gene/Q, chips on a TPU pod) and a stream of jobs, allocate cuboid
+partitions.  Policies differ in which geometry they pick for a given size:
+
+* ``ElongatedPolicy``     — worst-case baseline: most elongated cuboid that
+  fits (models "fill dimension-by-dimension" schedulers; JUQUEEN worst case).
+* ``ListPolicy``          — a fixed geometry per size (models Mira's
+  predefined partition list).
+* ``IsoperimetricPolicy`` — the paper's policy: the geometry of maximal
+  internal bisection bandwidth that fits the current free space, preferring
+  better-bisection geometries even when fragmentation makes them harder to
+  place (falls back in bisection order).
+* ``HintedPolicy``        — isoperimetric for jobs flagged contention-bound,
+  first-fit otherwise (Section 5's scheduler-hint proposal).
+
+Placement is exact: an occupancy grid over the machine torus is scanned for a
+translate of the (rotated) cuboid.  Wrap-around placement is allowed, since
+torus partitions remain tori (BG/Q) — for TPU-style fabrics the resulting
+slice's wrap flags are recomputed by :func:`repro.network.fabric.slice_fabric`.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .geometry import Geometry, bisection_links, canonical, sub_cuboids
+from .routing import predict_pairing_time
+
+Coord = Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class JobRequest:
+    job_id: int
+    units: int  # allocation units (midplanes / chips)
+    contention_bound: bool = True
+    duration: float = 1.0  # abstract time units, for the queue simulator
+
+
+@dataclass(frozen=True)
+class Placement:
+    job_id: int
+    geometry: Geometry  # canonical (sorted desc)
+    oriented: Tuple[int, ...]  # per-machine-dimension extent actually placed
+    offset: Coord
+    bisection_links: int
+
+
+class MachineState:
+    """Occupancy grid over the machine's allocation-unit torus."""
+
+    def __init__(self, dims: Sequence[int]):
+        self.dims = tuple(int(d) for d in dims)
+        self.grid = np.zeros(self.dims, dtype=bool)
+        self.placements: Dict[int, Placement] = {}
+
+    @property
+    def free_units(self) -> int:
+        return int((~self.grid).sum())
+
+    def _cells(self, oriented: Sequence[int], offset: Coord) -> Tuple[np.ndarray, ...]:
+        slices = [
+            np.array([(offset[k] + i) % self.dims[k] for i in range(oriented[k])])
+            for k in range(len(self.dims))
+        ]
+        mesh = np.meshgrid(*slices, indexing="ij")
+        return tuple(m.ravel() for m in mesh)
+
+    def find_placement(self, geometry: Sequence[int]) -> Optional[Tuple[Tuple[int, ...], Coord]]:
+        """First free translate of any orientation of the cuboid; None if full."""
+        g = canonical(geometry)
+        g = g + (1,) * (len(self.dims) - len(g))
+        for perm in sorted(set(itertools.permutations(g))):
+            if any(s > a for s, a in zip(perm, self.dims)):
+                continue
+            for offset in itertools.product(*(range(a) for a in self.dims)):
+                cells = self._cells(perm, offset)
+                if not self.grid[cells].any():
+                    return perm, offset
+        return None
+
+    def allocate(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
+        spot = self.find_placement(geometry)
+        if spot is None:
+            return None
+        oriented, offset = spot
+        cells = self._cells(oriented, offset)
+        self.grid[cells] = True
+        p = Placement(
+            job_id=job_id,
+            geometry=canonical(geometry),
+            oriented=oriented,
+            offset=offset,
+            bisection_links=bisection_links(canonical(geometry)),
+        )
+        self.placements[job_id] = p
+        return p
+
+    def release(self, job_id: int) -> None:
+        p = self.placements.pop(job_id)
+        cells = self._cells(p.oriented, p.offset)
+        self.grid[cells] = False
+
+
+# ---------------------------------------------------------------------------
+# Policies.
+# ---------------------------------------------------------------------------
+class AllocationPolicy:
+    name = "base"
+
+    def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
+        """Geometries to try, in preference order."""
+        raise NotImplementedError
+
+
+class ElongatedPolicy(AllocationPolicy):
+    """Most elongated geometry first (adversarial / naive filler)."""
+
+    name = "elongated"
+
+    def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
+        geoms = list(sub_cuboids(machine.dims, units))
+        return sorted(geoms, key=lambda g: (-g[0], g))
+
+
+class IsoperimetricPolicy(AllocationPolicy):
+    """The paper's policy: maximal internal bisection bandwidth first."""
+
+    name = "isoperimetric"
+
+    def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
+        geoms = list(sub_cuboids(machine.dims, units))
+        return sorted(geoms, key=lambda g: (-bisection_links(g), g))
+
+
+class ListPolicy(AllocationPolicy):
+    """A fixed geometry per size (Mira's predefined scheduler list)."""
+
+    name = "list"
+
+    def __init__(self, table: Dict[int, Geometry]):
+        self.table = dict(table)
+
+    def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
+        if units not in self.table:
+            return []
+        return [canonical(self.table[units])]
+
+
+class HintedPolicy(AllocationPolicy):
+    """Contention-bound jobs get isoperimetric geometries; others first-fit."""
+
+    name = "hinted"
+
+    def __init__(self):
+        self.iso = IsoperimetricPolicy()
+        self.any = ElongatedPolicy()
+
+    def geometry_preferences(
+        self, machine: MachineState, units: int, contention_bound: bool = True
+    ) -> List[Geometry]:
+        pol = self.iso if contention_bound else self.any
+        return pol.geometry_preferences(machine, units)
+
+
+# ---------------------------------------------------------------------------
+# Queue simulator.
+# ---------------------------------------------------------------------------
+@dataclass
+class ScheduledJob:
+    request: JobRequest
+    placement: Placement
+    start: float
+    end: float
+    predicted_comm_time: float  # pairing-benchmark proxy, seconds/byte
+
+
+@dataclass
+class SimulationResult:
+    policy: str
+    jobs: List[ScheduledJob] = field(default_factory=list)
+    rejected: List[int] = field(default_factory=list)
+
+    @property
+    def mean_comm_time(self) -> float:
+        if not self.jobs:
+            return 0.0
+        return float(np.mean([j.predicted_comm_time for j in self.jobs]))
+
+    @property
+    def makespan(self) -> float:
+        return max((j.end for j in self.jobs), default=0.0)
+
+
+def simulate_queue(
+    machine_dims: Sequence[int],
+    jobs: Iterable[JobRequest],
+    policy: AllocationPolicy,
+    unit_node_dims: Optional[Sequence[int]] = None,
+    link_bw: float = 1.0,
+) -> SimulationResult:
+    """FCFS queue simulation with exact cuboid placement.
+
+    ``unit_node_dims``: node dims per allocation unit (e.g. (4,4,4,4,2) for a
+    BG/Q midplane); the contention proxy is evaluated at node level.
+    """
+    machine = MachineState(machine_dims)
+    result = SimulationResult(policy=policy.name)
+    now = 0.0
+    running: List[ScheduledJob] = []
+    for req in jobs:
+        placed: Optional[Placement] = None
+        while placed is None:
+            if isinstance(policy, HintedPolicy):
+                prefs = policy.geometry_preferences(
+                    machine, req.units, req.contention_bound
+                )
+            else:
+                prefs = policy.geometry_preferences(machine, req.units)
+            for g in prefs:
+                placed = machine.allocate(req.job_id, g)
+                if placed is not None:
+                    break
+            if placed is None:
+                # advance time to the next completion and retry
+                running.sort(key=lambda j: j.end)
+                if not running:
+                    result.rejected.append(req.job_id)
+                    break
+                done = running.pop(0)
+                now = done.end
+                machine.release(done.request.job_id)
+        if placed is None:
+            continue
+        node_dims = _node_dims(placed.geometry, unit_node_dims)
+        pred = predict_pairing_time(node_dims, 1.0, link_bw)
+        job = ScheduledJob(
+            request=req,
+            placement=placed,
+            start=now,
+            end=now + req.duration,
+            predicted_comm_time=pred.time_per_volume,
+        )
+        result.jobs.append(job)
+        running.append(job)
+    return result
+
+
+def _node_dims(geometry: Geometry, unit_node_dims: Optional[Sequence[int]]) -> Geometry:
+    if unit_node_dims is None:
+        return geometry
+    # Each allocation-unit dim scales the node torus; extra unit dims (the
+    # BG/Q internal 5th dimension) are appended.
+    unit = tuple(unit_node_dims)
+    scaled = tuple(g * u for g, u in zip(geometry, unit[: len(geometry)]))
+    return canonical(scaled + unit[len(geometry):])
+
+
+def avoidable_contention_ratio(
+    machine_dims: Sequence[int],
+    units: int,
+    unit_node_dims: Optional[Sequence[int]] = None,
+) -> float:
+    """Worst/best predicted pairing time over geometries of a given size —
+    the paper's 'avoidable contention' factor (×2 for many BG/Q sizes)."""
+    times = []
+    for g in sub_cuboids(machine_dims, units):
+        node_dims = _node_dims(g, unit_node_dims)
+        times.append(predict_pairing_time(node_dims, 1.0, 1.0).time_per_volume)
+    if not times:
+        raise ValueError(f"no cuboid of {units} units fits in {machine_dims}")
+    return max(times) / min(times)

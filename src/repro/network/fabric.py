@@ -1,0 +1,232 @@
+"""Unified torus fabric model: one class for BG/Q- and TPU-style tori.
+
+This merges what used to be two separate models:
+
+* ``repro.core.torus.Torus`` — the paper's fully-wrapped Blue Gene/Q torus
+  with double links on length-2 dimensions, used by the isoperimetric
+  analysis; and
+* ``repro.core.collectives.TorusFabric`` — the TPU-adapted fabric with
+  per-dimension wrap flags and single links on length-2 dimensions.
+
+Both are now parameterisations of :class:`TorusFabric`; the thin
+:class:`Torus` wrapper keeps the historical geometry-only API and delegates
+every computation to :mod:`repro.network.geometry`.
+
+Hardware conventions (see DESIGN.md):
+
+* Blue Gene/Q: a partition *always* retains wrap-around links (a partition of
+  midplane geometry g is itself a torus), and a dimension of length 2 has two
+  parallel physical links — ``TorusFabric.bgq(dims)``.
+* TPU ICI: a slice gets wrap-around links in a dimension only when it spans
+  that full pod dimension, and a length-2 dimension has a single link —
+  ``TorusFabric.tpu(dims, wrap)`` / :func:`slice_fabric`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, Iterator, Optional, Sequence, Tuple
+
+from . import geometry
+from .geometry import Geometry, canonical, volume
+
+# TPU v5e-class constants (per chip / per link, bytes per second).
+DEFAULT_LINK_BW = 50e9  # ~50 GB/s per ICI link per direction (prompt spec)
+POD_DCI_BW = 12.5e9  # inter-pod (data-center network) per-chip share, est.
+
+
+@dataclass(frozen=True)
+class TorusFabric:
+    """A physical torus (or mesh) fabric: a machine, a pod, or a slice."""
+
+    dims: Tuple[int, ...]
+    wrap: Tuple[bool, ...]  # wrap-around link present per dimension
+    link_bw: float = DEFAULT_LINK_BW  # bytes/s per link per direction
+    double_link_on_2: bool = False  # Blue Gene/Q: True, TPU: False
+
+    def __post_init__(self):
+        if len(self.dims) != len(self.wrap):
+            raise ValueError("dims and wrap must have equal length")
+
+    # -- constructors ----------------------------------------------------------
+    @classmethod
+    def bgq(cls, dims: Sequence[int], link_bw: float = DEFAULT_LINK_BW) -> "TorusFabric":
+        """Blue Gene/Q convention: fully wrapped, double links on a==2."""
+        d = tuple(int(a) for a in dims)
+        return cls(d, (True,) * len(d), link_bw, double_link_on_2=True)
+
+    @classmethod
+    def tpu(
+        cls,
+        dims: Sequence[int],
+        wrap: Optional[Sequence[bool]] = None,
+        link_bw: float = DEFAULT_LINK_BW,
+    ) -> "TorusFabric":
+        """TPU ICI convention: explicit wrap flags, single links on a==2."""
+        d = tuple(int(a) for a in dims)
+        w = tuple(bool(x) for x in wrap) if wrap is not None else (True,) * len(d)
+        return cls(d, w, link_bw, double_link_on_2=False)
+
+    # -- basic quantities ------------------------------------------------------
+    @property
+    def num_chips(self) -> int:
+        return volume(self.dims)
+
+    # alias for graph-flavoured callers
+    @property
+    def num_vertices(self) -> int:
+        return self.num_chips
+
+    @property
+    def is_fully_wrapped(self) -> bool:
+        return all(self.wrap[k] for k, a in enumerate(self.dims) if a > 1)
+
+    def links_across_dim(self, k: int) -> int:
+        """Links crossing a perpendicular plane of dimension k (per plane)."""
+        return self.num_chips // self.dims[k]
+
+    def bisection_links(self) -> int:
+        """Internal bisection in links.
+
+        For fully-wrapped double-link fabrics (the paper's BG/Q convention)
+        this is the exact edge-isoperimetric computation, including the
+        cuboid search for odd longest dimensions.  For partially-wrapped or
+        single-link fabrics it is the min-over-dimensions halving cut: a
+        wrapped dimension is cut in two places, an unwrapped (chain)
+        dimension in one; a length-2 wrapped dimension with double links
+        contributes 2 parallel links.
+        """
+        if self.is_fully_wrapped and self.double_link_on_2:
+            return geometry.bisection_links(self.dims)
+        best = None
+        for k, a in enumerate(self.dims):
+            if a == 1:
+                continue
+            planes = 2 if (self.wrap[k] and a > 2) else 1
+            if a == 2 and self.wrap[k] and self.double_link_on_2:
+                planes = 2
+            cut = planes * self.links_across_dim(k)
+            best = cut if best is None else min(best, cut)
+        return 0 if best is None else best
+
+    def bisection_bandwidth(self) -> float:
+        """Bytes/s across the bisection, both directions of each link."""
+        return 2.0 * self.bisection_links() * self.link_bw
+
+    # -- geometry delegation ---------------------------------------------------
+    def contains_cuboid(self, cuboid: Sequence[int]) -> bool:
+        return geometry.contains_cuboid(self.dims, cuboid)
+
+    def sub_cuboids(self, size: int) -> Iterator[Geometry]:
+        return geometry.sub_cuboids(self.dims, size)
+
+
+@dataclass(frozen=True)
+class Torus:
+    """A fully-wrapped D-dimensional torus graph (the paper's object).
+
+    Thin compatibility wrapper over :mod:`repro.network.geometry`; all edge
+    counting follows the Blue Gene/Q double-link convention.  Prefer
+    ``TorusFabric.bgq(dims)`` for new bandwidth-aware code.
+    """
+
+    dims: Geometry
+
+    def __init__(self, dims: Iterable[int]):
+        object.__setattr__(self, "dims", canonical(dims))
+
+    @property
+    def D(self) -> int:
+        return len(self.dims)
+
+    @property
+    def num_vertices(self) -> int:
+        return volume(self.dims)
+
+    @property
+    def degree(self) -> int:
+        return geometry.degree(self.dims)
+
+    @property
+    def num_edges(self) -> int:
+        return geometry.num_edges(self.dims)
+
+    def fabric(self, link_bw: float = DEFAULT_LINK_BW) -> TorusFabric:
+        """The equivalent bandwidth-aware fabric (BG/Q convention)."""
+        return TorusFabric.bgq(self.dims, link_bw)
+
+    def contains_cuboid(self, cuboid: Sequence[int]) -> bool:
+        return geometry.contains_cuboid(self.dims, cuboid)
+
+    def cuboid_cut(self, cuboid: Sequence[int]) -> int:
+        return geometry.cuboid_cut(self.dims, cuboid)
+
+    def cuboid_cut_aligned(self, sides: Sequence[int]) -> int:
+        return geometry.cuboid_cut_aligned(self.dims, sides)
+
+    def cuboid_interior(self, cuboid: Sequence[int]) -> int:
+        return geometry.cuboid_interior(self.dims, cuboid)
+
+    def sub_cuboids(self, size: int) -> Iterator[Geometry]:
+        return geometry.sub_cuboids(self.dims, size)
+
+    def bisection_links(self) -> int:
+        return geometry.bisection_links(self.dims)
+
+
+# ---------------------------------------------------------------------------
+# Slice planning (the paper's technique at the job level).
+# ---------------------------------------------------------------------------
+def slice_fabric(pod: TorusFabric, geometry_: Sequence[int]) -> TorusFabric:
+    """The fabric of a cuboid slice allocated from a pod.
+
+    TPU semantics: wrap in a dimension only where the slice covers the full
+    (wrapped) pod dimension.  Slice sides are matched to pod dims tightest-fit.
+    """
+    g = canonical(geometry_)
+    g = g + (1,) * (len(pod.dims) - len(g))
+    if len(g) > len(pod.dims):
+        raise ValueError(f"slice {g} has more dims than pod {pod.dims}")
+    avail = sorted(range(len(pod.dims)), key=lambda i: pod.dims[i])
+    dims, wrap = [], []
+    used = set()
+    for side in g:
+        pick = None
+        for i in avail:
+            if i not in used and pod.dims[i] >= side:
+                pick = i
+                break
+        if pick is None:
+            raise ValueError(f"slice {g} does not fit in pod {pod.dims}")
+        used.add(pick)
+        dims.append(side)
+        wrap.append(pod.wrap[pick] and side == pod.dims[pick])
+    return TorusFabric(tuple(dims), tuple(wrap), pod.link_bw, pod.double_link_on_2)
+
+
+def best_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
+    """Among all cuboid slices of the requested size that fit the pod, return
+    the geometry with maximal internal bisection (links), with ties broken
+    toward balanced shapes."""
+    best: Optional[Tuple[Geometry, int]] = None
+    for g in geometry.sub_cuboids(pod.dims, chips):
+        fab = slice_fabric(pod, g)
+        b = fab.bisection_links()
+        if best is None or b > best[1] or (b == best[1] and g < best[0]):
+            best = (g, b)
+    if best is None:
+        raise ValueError(f"no cuboid slice of {chips} chips fits in pod {pod.dims}")
+    return best
+
+
+def worst_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
+    worst: Optional[Tuple[Geometry, int]] = None
+    for g in geometry.sub_cuboids(pod.dims, chips):
+        fab = slice_fabric(pod, g)
+        b = fab.bisection_links()
+        if worst is None or b < worst[1] or (b == worst[1] and g > worst[0]):
+            worst = (g, b)
+    if worst is None:
+        raise ValueError(f"no cuboid slice of {chips} chips fits in pod {pod.dims}")
+    return worst

@@ -1,0 +1,135 @@
+"""Hypothesis with a random-sampling fallback.
+
+The property-based tests use a small subset of the hypothesis API.  When
+hypothesis is installed (the ``[test]`` extra in pyproject.toml) it is used
+directly — shrinking, the example database and the full strategy language
+all work.  When it is not, this module provides a deterministic
+random-sampling stand-in covering exactly the strategies the suite uses
+(``integers``, ``sampled_from``, ``lists``, ``permutations``, ``data``,
+``.map``), so the properties still execute with N random examples instead of
+silently skipping entire test modules.
+
+Usage in tests:
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised implicitly by which env runs the suite
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data`` fixture."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy):
+            return strategy.sample(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: rng.choice(items))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def permutations(seq):
+            items = list(seq)
+
+            def sample(rng):
+                out = list(items)
+                rng.shuffle(out)
+                return out
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _St()
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kwargs):
+        """Records max_examples on the wrapped (given-decorated) test."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test body over deterministic random samples.
+
+        The RNG is seeded per test function name, so failures reproduce.
+        """
+
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(f"fallback:{fn.__module__}.{fn.__qualname__}")
+                for i in range(n):
+                    drawn_args = tuple(s.sample(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*drawn_args, **drawn_kw)
+                    except Exception as e:  # re-raise with the failing example
+                        raise AssertionError(
+                            f"fallback property run failed on example {i}: "
+                            f"args={drawn_args} kwargs={drawn_kw}"
+                        ) from e
+
+            # No functools.wraps: pytest must see a zero-argument signature,
+            # not the strategy parameters (it would resolve them as fixtures).
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+            return wrapper
+
+        return deco

@@ -1,0 +1,86 @@
+"""The historical per-hop DOR link-load walker, kept as a test reference.
+
+This is the exact pre-refactor implementation of ``repro.core.contention.
+LinkLoads`` (one Python loop iteration per hop).  It exists only to validate
+the vectorized engine in ``repro.network.routing`` — the equivalence property
+tests route identical traffic through both and compare the full load tensors
+— and to anchor the routing micro-benchmark's speedup claim.  Do not use it
+in library code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import numpy as np
+
+Coord = Tuple[int, ...]
+
+
+@dataclass
+class ReferenceLinkLoads:
+    """Exact directed-link load accounting on a torus under DOR routing."""
+
+    dims: Tuple[int, ...]
+    split_ties: bool = True
+    # loads[k][d] has the torus shape; entry v = volume on the link leaving
+    # vertex v in dimension k, direction d (0: +1, 1: -1).
+    loads: List[List[np.ndarray]] = field(init=False)
+
+    def __post_init__(self):
+        self.dims = tuple(int(a) for a in self.dims)
+        self.loads = [
+            [np.zeros(self.dims, dtype=np.float64) for _ in range(2)]
+            for _ in range(len(self.dims))
+        ]
+
+    def add_path(self, src: Coord, dst: Coord, vol: float) -> None:
+        """Route vol from src to dst with dimension-ordered minimal routing."""
+        cur = list(src)
+        for k, a in enumerate(self.dims):
+            if a == 1:
+                continue
+            delta = (dst[k] - cur[k]) % a
+            if delta == 0:
+                continue
+            if delta < a - delta:
+                self._walk(cur, k, +1, delta, vol)
+            elif delta > a - delta:
+                self._walk(cur, k, -1, a - delta, vol)
+            else:  # tie: distance exactly a/2
+                if self.split_ties:
+                    self._walk(list(cur), k, +1, delta, vol / 2.0)
+                    self._walk(cur, k, -1, delta, vol / 2.0)
+                else:
+                    self._walk(cur, k, +1, delta, vol)
+            cur[k] = dst[k]
+
+    def _walk(self, cur: List[int], k: int, direction: int, hops: int, vol: float) -> None:
+        a = self.dims[k]
+        pos = list(cur)
+        for _ in range(hops):
+            if direction > 0:
+                self.loads[k][0][tuple(pos)] += vol
+                pos[k] = (pos[k] + 1) % a
+            else:
+                self.loads[k][1][tuple(pos)] += vol
+                pos[k] = (pos[k] - 1) % a
+
+    def load_array(self) -> np.ndarray:
+        """(D, 2, *dims) tensor, matching routing.route_dor's layout."""
+        return np.stack([np.stack(pair) for pair in self.loads])
+
+    def max_load(self) -> float:
+        """Maximum load on any directed link (double links halve, BG/Q)."""
+        m = 0.0
+        for k, a in enumerate(self.dims):
+            if a == 1:
+                continue
+            scale = 0.5 if a == 2 else 1.0
+            for d in range(2):
+                m = max(m, scale * float(self.loads[k][d].max()))
+        return m
+
+    def total_hop_volume(self) -> float:
+        return float(sum(arr.sum() for pair in self.loads for arr in pair))

@@ -3,7 +3,7 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bgq import node_dims_of_midplane_geometry as node_dims
 from repro.core.contention import (

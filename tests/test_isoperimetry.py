@@ -5,7 +5,7 @@ import itertools
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.torus import Torus, ExplicitTorus, canonical, factorizations, volume
 from repro.core.isoperimetry import (

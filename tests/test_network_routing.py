@@ -1,0 +1,278 @@
+"""Equivalence and property tests for the repro.network subsystem.
+
+Pins the three-way agreement at the heart of the refactor:
+
+    vectorized engine  ==  per-hop reference walker  ==  closed forms
+
+on tori up to 4D including length-2 (double-link) dimensions, plus the
+traffic-pattern library, the unified fabric conventions, and the
+deprecation shims.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from reference_dor import ReferenceLinkLoads
+
+from repro.network import (
+    LinkLoads,
+    Torus,
+    TorusFabric,
+    all_to_all_max_load,
+    pairing_speedup,
+    route_dor,
+    simulate_pattern,
+    uniform_offset_max_load,
+)
+from repro.network import patterns
+from repro.network.collectives import AxisEmbedding, ring_all_gather_time
+from repro.network.fabric import slice_fabric
+
+
+def _route_reference(dims, src, dst, vol, split_ties=True):
+    ref = ReferenceLinkLoads(tuple(dims), split_ties=split_ties)
+    for s, d, v in zip(src, dst, vol):
+        ref.add_path(tuple(int(x) for x in s), tuple(int(x) for x in d), float(v))
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# Engine == per-hop walker.
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 4, 5, 6]), min_size=1, max_size=4).map(tuple),
+    seed=st.integers(0, 10**6),
+    split=st.booleans() if hasattr(st, "booleans") else st.sampled_from([True, False]),
+)
+def test_property_engine_matches_walker(dims, seed, split):
+    """Full load-tensor equivalence on random traffic, random tori <= 4D."""
+    if int(np.prod(dims)) == 1:
+        return
+    rng = np.random.default_rng(seed)
+    verts = patterns.vertices(dims)
+    m = int(rng.integers(1, 50))
+    src = verts[rng.integers(0, len(verts), m)]
+    dst = verts[rng.integers(0, len(verts), m)]
+    vol = rng.random(m) + 0.1
+    got = route_dor(dims, src, dst, vol, split_ties=split)
+    ref = _route_reference(dims, src, dst, vol, split_ties=split)
+    assert np.allclose(got, ref.load_array(), atol=1e-9)
+
+
+@pytest.mark.parametrize(
+    "dims", [(4, 2), (2, 2), (8, 4, 2), (5, 3), (3, 3, 2, 2), (6, 4, 2, 2)]
+)
+def test_linkloads_matches_walker_on_pairing(dims):
+    """The paper's benchmark traffic: identical max loads and hop volumes,
+    including length-2 double-link dimensions."""
+    ll = LinkLoads(dims)
+    ref = ReferenceLinkLoads(dims)
+    for (u, v) in patterns.pairing_pairs(dims):
+        ll.add_path(u, v, 1.0)
+        ll.add_path(v, u, 1.0)
+        ref.add_path(u, v, 1.0)
+        ref.add_path(v, u, 1.0)
+    assert ll.max_load() == pytest.approx(ref.max_load())
+    assert ll.total_hop_volume() == pytest.approx(ref.total_hop_volume())
+    assert np.allclose(ll.load_array(), ref.load_array())
+
+
+def test_incremental_add_path_equals_batch():
+    dims = (4, 3, 2)
+    verts = patterns.vertices(dims)
+    rng = np.random.default_rng(7)
+    src = verts[rng.integers(0, len(verts), 20)]
+    dst = verts[rng.integers(0, len(verts), 20)]
+    vol = rng.random(20)
+    a = LinkLoads(dims)
+    for s, d, v in zip(src, dst, vol):
+        a.add_path(tuple(s), tuple(d), float(v))
+    b = LinkLoads(dims)
+    b.add_batch(src, dst, vol)
+    assert np.allclose(a.load_array(), b.load_array())
+
+
+# ---------------------------------------------------------------------------
+# Engine == closed forms.
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 4, 5, 6]), min_size=1, max_size=4).map(tuple),
+    seed=st.integers(0, 10**6),
+)
+def test_property_uniform_offset_closed_form(dims, seed):
+    """Translation-invariant patterns: engine max == O(D) closed form,
+    on tori up to 4D including length-2 double-link dims."""
+    if int(np.prod(dims)) == 1:
+        return
+    rng = np.random.default_rng(seed)
+    offset = tuple(int(rng.integers(0, a)) for a in dims)
+    s, d, v = patterns.uniform_shift(dims, offset)
+    ll = LinkLoads(dims)
+    ll.add_batch(s, d, v)
+    assert ll.max_load() == pytest.approx(uniform_offset_max_load(dims, offset))
+
+
+def test_uniform_offset_single_link_convention():
+    """The closed form honours double_link_on_2=False (TPU) consistently
+    with the engine's max_link_load normalisation."""
+    dims = (4, 2)
+    off = (0, 1)
+    s, d, v = patterns.uniform_shift(dims, off)
+    ll = LinkLoads(dims, double_link_on_2=False)
+    ll.add_batch(s, d, v)
+    expect = uniform_offset_max_load(dims, off, double_link_on_2=False)
+    assert ll.max_load() == pytest.approx(expect)
+    # BG/Q halves it via the parallel link
+    assert uniform_offset_max_load(dims, off) == pytest.approx(expect / 2)
+
+
+@pytest.mark.parametrize("dims", [(3,), (5,), (3, 3), (5, 3), (3, 2, 2), (5, 3, 2)])
+@pytest.mark.parametrize("split", [True, False])
+def test_all_to_all_closed_form_exact_on_odd_tori(dims, split):
+    """The direction-asymmetry satellite: + and - hop volumes are counted
+    explicitly and the closed form matches the exact simulator on small odd
+    tori (where the historical code merely assumed symmetry)."""
+    s, d, v = patterns.all_to_all(dims)
+    ll = LinkLoads(dims, split_ties=split)
+    ll.add_batch(s, d, v)
+    assert ll.max_load() == pytest.approx(all_to_all_max_load(dims, split_ties=split))
+
+
+def test_all_to_all_unsplit_directions_differ():
+    """With ties unsplit, the forward direction carries the whole antipodal
+    volume — the two directions genuinely differ and the closed form tracks
+    the loaded one."""
+    dims = (4, 4)
+    assert all_to_all_max_load(dims, split_ties=False) > all_to_all_max_load(
+        dims, split_ties=True
+    )
+
+
+def test_all_to_all_max_load_positive_and_scales():
+    small = all_to_all_max_load((4, 4))
+    big = all_to_all_max_load((8, 8))
+    assert small > 0 and big > small
+
+
+# ---------------------------------------------------------------------------
+# Pattern library.
+# ---------------------------------------------------------------------------
+def test_bisection_pairing_equals_furthest_shift():
+    dims = (6, 4, 2)
+    s, d, v = patterns.bisection_pairing(dims)
+    ll = simulate_pattern(dims, zip(map(tuple, s), map(tuple, d), v))
+    assert ll.max_load() == pytest.approx(
+        uniform_offset_max_load(dims, patterns.furthest_offset(dims))
+    )
+
+
+def test_halo_exchange_unit_load():
+    """±1 shifts load every link with exactly the per-message volume."""
+    dims = (4, 4, 4)
+    s, d, v = patterns.nearest_neighbor_halo(dims, vol=3.0)
+    ll = LinkLoads(dims)
+    ll.add_batch(s, d, v)
+    arr = ll.load_array()
+    assert np.allclose(arr, 3.0)
+
+
+def test_ring_shift_loads_only_one_dimension():
+    dims = (4, 4)
+    s, d, v = patterns.ring_shift(dims, axis=1, steps=1)
+    arr = route_dor(dims, s, d, v)
+    assert arr[0].max() == 0.0
+    assert arr[1, 0].min() == 1.0  # + direction uniformly loaded
+    assert arr[1, 1].max() == 0.0
+
+
+def test_random_permutation_is_permutation():
+    dims = (4, 3, 2)
+    s, d, v = patterns.random_permutation(dims, seed=3)
+    n = int(np.prod(dims))
+    assert len(v) == n
+    assert len({tuple(x) for x in d}) == n  # destinations all distinct
+
+
+def test_transpose_pattern():
+    dims = (4, 4)
+    s, d, v = patterns.transpose(dims)
+    assert all(tuple(b) == (a[1], a[0]) for a, b in zip(s, d))
+    ll = LinkLoads(dims)
+    ll.add_batch(s, d, v)
+    assert ll.max_load() > 0
+
+
+def test_ring_all_gather_traffic_matches_cost_model():
+    """Routing the all-gather's neighbour traffic reproduces the closed-form
+    collective time: max link load / bw == ring_all_gather_time."""
+    dims = (8, 4)
+    bytes_out = 1e9
+    s, d, v = patterns.ring_all_gather(dims, axis=0, bytes_out=bytes_out)
+    ll = LinkLoads(dims, double_link_on_2=False)
+    ll.add_batch(s, d, v)
+    link_bw = 50e9
+    emb = AxisEmbedding(size=8, wrapped=True)
+    assert ll.max_load() / link_bw == pytest.approx(
+        ring_all_gather_time(bytes_out, emb, link_bw)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Unified fabric conventions.
+# ---------------------------------------------------------------------------
+def test_bgq_fabric_equals_torus_bisection():
+    for dims in [(16, 4, 4, 4, 2), (8, 4, 2), (4, 4), (7, 2, 2, 2), (5, 1)]:
+        assert TorusFabric.bgq(dims).bisection_links() == Torus(dims).bisection_links()
+
+
+def test_tpu_vs_bgq_length2_convention():
+    # On a 2x2, halving a length-2 dimension cuts 2 chip pairs: BG/Q counts
+    # two parallel links per pair (4), TPU a single link per pair (2).
+    assert TorusFabric.bgq((2, 2)).bisection_links() == 4
+    assert TorusFabric.tpu((2, 2), (True, True)).bisection_links() == 2
+    # With a longer even dimension present the two conventions agree: the
+    # minimum cut halves the 4-ring either way.
+    assert TorusFabric.bgq((4, 2)).bisection_links() == 4
+    assert TorusFabric.tpu((4, 2), (True, True)).bisection_links() == 4
+
+
+def test_slice_fabric_wrap_and_double_link_inherited():
+    pod = TorusFabric.bgq((4, 4))
+    s = slice_fabric(pod, (4, 2))
+    assert s.double_link_on_2 and s.wrap == (True, False)
+
+
+def test_odd_longest_dim_exact_bisection():
+    """(7,2,2) fully wrapped: no cuboid halves the 7-ring, so the exact
+    search over floor(n/2) cuboids applies (the plane formula would claim 8)."""
+    assert Torus((7, 2, 2)).bisection_links() == 28
+    assert TorusFabric.bgq((7, 2, 2)).bisection_links() == 28
+
+
+def test_pairing_speedup_consistency_via_network_namespace():
+    assert pairing_speedup((16, 4, 4, 4, 2), (8, 8, 4, 4, 2)) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims.
+# ---------------------------------------------------------------------------
+def test_core_shims_reexport_network_objects():
+    from repro.core import contention as c_contention
+    from repro.core import torus as c_torus
+    from repro.core import collectives as c_collectives
+    from repro.core import allocation as c_allocation
+    import repro.network.allocation as n_allocation
+    import repro.network.routing as n_routing
+
+    assert c_torus.Torus is Torus
+    assert c_contention.LinkLoads is n_routing.LinkLoads
+    assert c_collectives.TorusFabric is TorusFabric
+    assert c_allocation.MachineState is n_allocation.MachineState
+    # the historical constructor signature still works
+    fab = c_collectives.TorusFabric((16, 16), (True, True))
+    assert fab.bisection_links() == 32

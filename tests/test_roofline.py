@@ -26,7 +26,7 @@ def test_xla_counts_while_bodies_once():
 
     x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    flops = jax.jit(f).lower(x, w).compile().cost_analysis()["flops"]
+    flops = roofline.xla_cost_analysis(jax.jit(f).lower(x, w).compile())["flops"]
     one_iter = 2 * 64 * 128 * 128
     assert flops == pytest.approx(one_iter, rel=0.01)  # NOT 10x
 
@@ -57,7 +57,7 @@ def _measured_flops(model, arch, B, S, kind="prefill"):
         fn = lambda p, b: model.forward(p, b)[0]
         params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
         return (
-            jax.jit(fn).lower(params, batch).compile().cost_analysis()["flops"]
+            roofline.xla_cost_analysis(jax.jit(fn).lower(params, batch).compile())["flops"]
         )
     raise ValueError(kind)
 
@@ -131,7 +131,7 @@ def test_small_mesh_dryrun_lowering():
         step, in_shardings=(shd, opt_shd, batch_shd), out_shardings=(shd, opt_shd, None)
     ).lower(params_shapes, opt_shapes, batch)
     compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    assert roofline.xla_cost_analysis(compiled)["flops"] > 0
     stats = roofline.collective_stats(compiled.as_text())
     assert isinstance(stats, dict)
 

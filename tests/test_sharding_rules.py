@@ -3,7 +3,7 @@ every architecture x mesh size combination (the dry-run's core invariant)."""
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import all_archs, get_arch
 from repro.distributed.sharding import ShardingRules, axis_size
