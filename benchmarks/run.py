@@ -18,6 +18,7 @@ from benchmarks.paper_tables import (
     table5_machine_design,
     tpu_slice_geometry,
 )
+from benchmarks.bench_allocation import allocation_microbench
 from benchmarks.bench_routing import routing_microbench
 from benchmarks.matmul_scaling import fig5_matmul, fig6_strong_scaling
 from benchmarks.roofline_report import dryrun_matrix, roofline_table
@@ -32,6 +33,7 @@ BENCHMARKS = [
     ("fig6_strong_scaling", fig6_strong_scaling),
     ("tpu_slice_geometry", tpu_slice_geometry),
     ("routing_microbench", routing_microbench),
+    ("allocation_microbench", allocation_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]

@@ -1,15 +1,37 @@
 """The paper's core analysis as a library walk-through: Blue Gene/Q partition
-tables, contention predictions, and the TPU-slice adaptation.
+tables, contention predictions, the TPU-slice adaptation, and a Mira-scale
+queue replay comparing allocation policies.
 
     PYTHONPATH=src python examples/partition_analysis.py
+
+The replay size defaults to 400 jobs; set REPLAY_JOBS to scale it (the
+vectorized placement engine handles thousands — the historical brute-force
+scan could not).
 """
+
+import os
+import time
+
+import numpy as np
 
 from repro.core import (
     MIRA, JUQUEEN, TorusFabric, best_slice_geometry, worst_slice_geometry,
     mira_partition_table, pairing_speedup,
 )
-from repro.core.bgq import node_dims_of_midplane_geometry as nd
+from repro.core.bgq import (
+    MIDPLANE_DIMS,
+    MIRA_SCHEDULER_PARTITIONS,
+    node_dims_of_midplane_geometry as nd,
+)
 from repro.launch.mesh import plan_slice
+from repro.network import (
+    ContentionScoredPolicy,
+    ElongatedPolicy,
+    IsoperimetricPolicy,
+    JobRequest,
+    ListPolicy,
+    simulate_queue,
+)
 
 print("== Mira partitions (paper Table 6): current vs isoperimetric-optimal ==")
 for r in mira_partition_table():
@@ -27,3 +49,127 @@ for chips in (16, 32, 64):
     print(f"  {chips:3d} chips: best {plan.slice_geometry} (bisection {plan.slice_bisection_links}) "
           f"vs worst {plan.worst_geometry} ({plan.worst_bisection_links}) "
           f"-> avoidable contention x{plan.avoidable_contention:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# Mira-scale queue replay (paper Section 6 / Table 6 setting): a synthetic
+# job stream over Mira's 4x4x3x2 midplane torus, replayed under four
+# allocation policies with arrivals and EASY backfill.
+# ---------------------------------------------------------------------------
+def mira_queue_replay(n_jobs: int, seed: int = 0):
+    """Synthetic Mira workload: sizes from the scheduler's partition list,
+    Poisson-ish arrivals, heavy-tailed durations.  Deterministic per seed."""
+    rng = np.random.default_rng(seed)
+    sizes = np.array([1, 2, 4, 8, 16, 24, 32, 48])
+    weights = np.array([0.25, 0.2, 0.18, 0.15, 0.1, 0.05, 0.04, 0.03])
+    weights = weights / weights.sum()
+    size = rng.choice(sizes, size=n_jobs, p=weights)
+    arrival = np.cumsum(rng.exponential(0.25, size=n_jobs))
+    duration = rng.lognormal(mean=0.0, sigma=0.6, size=n_jobs) + 0.2
+    return [
+        JobRequest(i, int(size[i]), True, float(duration[i]), float(arrival[i]))
+        for i in range(n_jobs)
+    ]
+
+
+def replay_policies(n_jobs: int, seed: int = 0, backfill: bool = True):
+    jobs = mira_queue_replay(n_jobs, seed)
+    policies = [
+        ElongatedPolicy(),
+        ListPolicy(MIRA_SCHEDULER_PARTITIONS),
+        IsoperimetricPolicy(),
+        ContentionScoredPolicy(),
+    ]
+    rows = []
+    for pol in policies:
+        t0 = time.perf_counter()
+        res = simulate_queue(
+            MIRA.midplane_dims, jobs, pol, MIDPLANE_DIMS,
+            backfill=backfill, measure_contention=True,
+        )
+        dt = time.perf_counter() - t0
+        rows.append(
+            {
+                "policy": res.policy,
+                "scheduled": len(res.jobs),
+                "rejected": len(res.rejected),
+                "mean_comm_time": res.mean_comm_time,
+                "mean_wait": res.mean_wait,
+                "makespan": res.makespan,
+                "mean_contention": res.mean_contention,
+                "replay_s": dt,
+            }
+        )
+    return rows
+
+
+def juqueen_shared_fabric_replay(n_jobs: int, seeds=(0, 1, 2, 3)):
+    """Interference replay on JUQUEEN's 7x2x2x2 midplane torus, treating the
+    fabric as *shared* (no electrical partition isolation).  Long spans on
+    the 7-ring route all-to-all traffic through foreign midplanes, so
+    placements can measurably load links that neighbours use; the
+    contention-scored policy minimises exactly that.  Two findings:
+    interference is *rare* even without isolation (the paper's
+    partition-isolation assumption is robust — on Mira's 4x4x3x2 torus it
+    is structurally zero, since no span exceeds half its ring), and where
+    it occurs the scored policy carries the least of it, so results are
+    averaged over several workload seeds.
+    """
+    rows = {}
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        sizes = np.array([4, 5, 6, 8, 10, 12, 20, 24])
+        size = rng.choice(sizes, size=n_jobs)
+        arrival = np.cumsum(rng.exponential(0.3, size=n_jobs))
+        duration = rng.lognormal(mean=0.0, sigma=0.5, size=n_jobs) + 0.3
+        jobs = [
+            JobRequest(i, int(size[i]), True, float(duration[i]), float(arrival[i]))
+            for i in range(n_jobs)
+        ]
+        for pol in (ElongatedPolicy(), IsoperimetricPolicy(), ContentionScoredPolicy()):
+            res = simulate_queue(
+                JUQUEEN.midplane_dims, jobs, pol, MIDPLANE_DIMS,
+                backfill=True, measure_contention=True,
+            )
+            row = rows.setdefault(
+                res.policy,
+                {"policy": res.policy, "scheduled": 0, "comm": [], "contention": []},
+            )
+            row["scheduled"] += len(res.jobs)
+            row["comm"].append(res.mean_comm_time)
+            row["contention"].append(res.mean_contention)
+    return [
+        {
+            "policy": r["policy"],
+            "scheduled": r["scheduled"],
+            "mean_comm_time": float(np.mean(r["comm"])),
+            "mean_contention": float(np.mean(r["contention"])),
+        }
+        for r in rows.values()
+    ]
+
+
+if __name__ == "__main__":
+    n_jobs = int(os.environ.get("REPLAY_JOBS", "400"))
+    print(f"\n== Mira queue replay ({n_jobs} jobs, arrivals + EASY backfill) ==")
+    rows = replay_policies(n_jobs)
+    for r in rows:
+        print(
+            f"  {r['policy']:>18}: scheduled {r['scheduled']:4d}  rejected {r['rejected']:3d}  "
+            f"comm {r['mean_comm_time']:.3f}  wait {r['mean_wait']:.2f}  "
+            f"makespan {r['makespan']:.1f}  shared-link {r['mean_contention']:.1f}  "
+            f"({r['replay_s']:.2f}s)"
+        )
+    iso = next(r for r in rows if r["policy"] == "isoperimetric")
+    elo = next(r for r in rows if r["policy"] == "elongated")
+    print(
+        f"  -> isoperimetric vs elongated predicted comm time: "
+        f"x{elo['mean_comm_time'] / iso['mean_comm_time']:.2f} avoidable"
+    )
+
+    print(f"\n== JUQUEEN shared-fabric replay ({n_jobs // 3} jobs x 4 seeds) ==")
+    for r in juqueen_shared_fabric_replay(n_jobs // 3):
+        print(
+            f"  {r['policy']:>18}: scheduled {r['scheduled']:4d}  "
+            f"comm {r['mean_comm_time']:.3f}  shared-link {r['mean_contention']:.4f}"
+        )

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from repro.network.allocation import (  # noqa: F401
     AllocationPolicy,
+    ContentionScoredPolicy,
     ElongatedPolicy,
     HintedPolicy,
     IsoperimetricPolicy,
@@ -23,6 +24,7 @@ from repro.network.allocation import (  # noqa: F401
 
 __all__ = [
     "AllocationPolicy",
+    "ContentionScoredPolicy",
     "ElongatedPolicy",
     "HintedPolicy",
     "IsoperimetricPolicy",

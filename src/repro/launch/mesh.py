@@ -30,13 +30,16 @@ from typing import Dict, Optional, Tuple
 from repro.network import (
     AxisAssignment,
     CollectiveCostModel,
+    MachineState,
+    Placement,
     TorusFabric,
     assign_axes,
+    best_placement,
     best_slice_geometry,
     slice_fabric,
     worst_slice_geometry,
 )
-from repro.network.fabric import DEFAULT_LINK_BW, POD_DCI_BW
+from repro.network.fabric import DEFAULT_LINK_BW, POD_DCI_BW, ranked_slice_geometries
 
 # TPU v5e-class pod: 16x16 torus, wrapped in both dimensions.
 POD_DIMS = (16, 16)
@@ -68,6 +71,7 @@ class MeshPlan:
     worst_bisection_links: int
     assignment: AxisAssignment
     cost_model: CollectiveCostModel
+    placement: Optional[Placement] = None  # set by occupancy-aware planning
 
     @property
     def avoidable_contention(self) -> float:
@@ -76,11 +80,68 @@ class MeshPlan:
             return 1.0
         return self.slice_bisection_links / self.worst_bisection_links
 
+    @property
+    def predicted_contention(self) -> float:
+        """Shared-link contention score of the planned placement (0 when the
+        plan was geometry-only or the pod was empty)."""
+        return self.placement.predicted_contention if self.placement else 0.0
 
-def plan_slice(chips: int, pod: Optional[TorusFabric] = None) -> MeshPlan:
-    """Choose slice geometry + axis layout for a C-chip job on one pod."""
+
+def plan_slice(
+    chips: int,
+    pod: Optional[TorusFabric] = None,
+    state: Optional[MachineState] = None,
+    job_id: Optional[int] = None,
+) -> MeshPlan:
+    """Choose slice geometry + axis layout for a C-chip job on one pod.
+
+    Without ``state`` the plan is geometry-only: the isoperimetric optimum
+    among all cuboids of the requested size (the empty-pod answer).  With a
+    ``state`` (a :class:`MachineState` occupancy grid over the pod's chips)
+    the planner walks geometries in slice-bisection order and, for the first
+    one with a free translate, scores every candidate placement with the
+    routing engine — least predicted interference with the pod's existing
+    placements, ties broken by the deterministic scan order (snug
+    anti-fragmentation tie-breaking only activates on interference-free
+    fabrics, which real pods, with their >= 6 rings, are not; see
+    :func:`repro.network.placement.best_placement`).  Passing ``job_id``
+    commits the chosen placement to ``state``.
+    """
     pod = pod or pod_fabric()
-    geom, bis = best_slice_geometry(pod, chips)
+    placement: Optional[Placement] = None
+    if state is None:
+        if job_id is not None:
+            raise ValueError("job_id requires a state (occupancy grid) to commit to")
+        geom, bis = best_slice_geometry(pod, chips)
+    else:
+        if tuple(state.dims) != tuple(pod.dims):
+            raise ValueError(
+                f"occupancy grid dims {state.dims} != pod dims {pod.dims}"
+            )
+        geom = None
+        bis = 0
+        for g, b in ranked_slice_geometries(pod, chips):
+            cand = best_placement(state.grid, g, state.traffic_loads())
+            if cand is not None:
+                geom, bis = g, b
+                placement = Placement(
+                    job_id=-1 if job_id is None else job_id,
+                    geometry=g,
+                    oriented=cand.oriented,
+                    offset=cand.offset,
+                    bisection_links=b,
+                    predicted_contention=cand.contention,
+                )
+                break
+        if geom is None:
+            raise ValueError(
+                f"no {chips}-chip cuboid slice fits the current occupancy of {pod.dims}"
+            )
+        if job_id is not None:
+            placement = state.commit(
+                job_id, geom, placement.oriented, placement.offset,
+                placement.predicted_contention, bisection=bis,
+            )
     wgeom, wbis = worst_slice_geometry(pod, chips)
     fabric = slice_fabric(pod, geom)
     # default logical axes for a single-pod job: data x model, sized by the
@@ -95,6 +156,7 @@ def plan_slice(chips: int, pod: Optional[TorusFabric] = None) -> MeshPlan:
         worst_bisection_links=wbis,
         assignment=assignment,
         cost_model=CollectiveCostModel(fabric, assignment),
+        placement=placement,
     )
 
 

@@ -13,7 +13,10 @@ Single home of every geometry / fabric / routing primitive in the repo
   patterns    — traffic-pattern library (bisection pairing, all-to-all,
                 halo exchange, ring collectives, permutations, transpose).
   collectives — jax.lax collective cost model + mesh-axis assignment.
-  allocation  — partition allocation policies and the queue simulator.
+  placement   — vectorized cuboid-placement engine: all free translates via
+                circular windowed sums, contention/contact scoring.
+  allocation  — partition allocation policies and the online queue
+                simulator (arrival streams, EASY backfill).
 
 The historical ``repro.core.{torus,contention,collectives,allocation}``
 modules re-export from here and are deprecated.
@@ -41,6 +44,7 @@ from .fabric import (
     Torus,
     TorusFabric,
     best_slice_geometry,
+    ranked_slice_geometries,
     slice_fabric,
     worst_slice_geometry,
 )
@@ -80,8 +84,22 @@ from .collectives import (
     ring_all_to_all_time,
     ring_reduce_scatter_time,
 )
+from .placement import (
+    ScoredPlacement,
+    best_placement,
+    fabric_can_interfere,
+    first_fit,
+    free_offset_mask,
+    is_spilling,
+    iter_free_placements,
+    pad_geometry,
+    placement_cells,
+    placement_loads,
+    shell_contact,
+)
 from .allocation import (
     AllocationPolicy,
+    ContentionScoredPolicy,
     ElongatedPolicy,
     HintedPolicy,
     IsoperimetricPolicy,

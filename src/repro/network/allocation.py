@@ -1,9 +1,11 @@
-"""Processor-allocation policies with isoperimetric partition selection.
+"""Processor-allocation policies, the placement engine wrapper, and an
+online queue simulator with arrival streams and backfill.
 
 This is the paper's contribution turned into a deployable scheduler
 component: given a machine fabric (a torus of allocation units — midplanes
 on Blue Gene/Q, chips on a TPU pod) and a stream of jobs, allocate cuboid
-partitions.  Policies differ in which geometry they pick for a given size:
+partitions.  Policies differ in which geometry they pick for a given size
+and (for the scored policy) where it lands:
 
 * ``ElongatedPolicy``     — worst-case baseline: most elongated cuboid that
   fits (models "fill dimension-by-dimension" schedulers; JUQUEEN worst case).
@@ -15,22 +17,49 @@ partitions.  Policies differ in which geometry they pick for a given size:
   place (falls back in bisection order).
 * ``HintedPolicy``        — isoperimetric for jobs flagged contention-bound,
   first-fit otherwise (Section 5's scheduler-hint proposal).
+* ``ContentionScoredPolicy`` — isoperimetric geometry choice plus *scored
+  placement*: among all free translates, pick the candidate minimising
+  predicted interference with existing placements (the job's intra-slice
+  all-to-all traffic routed on the machine torus by the DOR engine —
+  pairing traffic is provably isolated and would score zero everywhere),
+  breaking ties toward snug, fragmentation-avoiding offsets on
+  interference-free fabrics.
 
-Placement is exact: an occupancy grid over the machine torus is scanned for a
-translate of the (rotated) cuboid.  Wrap-around placement is allowed, since
-torus partitions remain tori (BG/Q) — for TPU-style fabrics the resulting
-slice's wrap flags are recomputed by :func:`repro.network.fabric.slice_fabric`.
+Placement is exact and vectorized: an occupancy grid over the machine torus
+is correlated with the cuboid kernel (:mod:`repro.network.placement`), so
+all free translates of all orientations come out of O(D·N) array work —
+the historical Python scan survives as ``tests/reference_placement.py``.
+Wrap-around placement is allowed, since torus partitions remain tori (BG/Q)
+— for TPU-style fabrics the resulting slice's wrap flags are recomputed by
+:func:`repro.network.fabric.slice_fabric`.
+
+The queue simulator is event-driven: jobs carry ``arrival`` timestamps,
+head-of-line blocking is FCFS-exact, and ``backfill=True`` enables
+EASY-style conservative backfill — a later job may jump the blocked head
+only if it terminates before the head's reservation (the earliest time the
+head is guaranteed to fit, computed by replaying completions on a scratch
+grid).
 """
 
 from __future__ import annotations
 
-import itertools
+import dataclasses
+import heapq
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .geometry import Geometry, bisection_links, canonical, sub_cuboids
+from .geometry import Geometry, bisection_links, canonical, sub_cuboids, volume
+from .placement import (
+    ScoredPlacement,
+    best_placement,
+    first_fit,
+    pad_geometry,
+    placement_cells,
+    placement_loads,
+)
 from .routing import predict_pairing_time
 
 Coord = Tuple[int, ...]
@@ -42,6 +71,7 @@ class JobRequest:
     units: int  # allocation units (midplanes / chips)
     contention_bound: bool = True
     duration: float = 1.0  # abstract time units, for the queue simulator
+    arrival: float = 0.0  # submission time (0 = all queued up front)
 
 
 @dataclass(frozen=True)
@@ -51,62 +81,133 @@ class Placement:
     oriented: Tuple[int, ...]  # per-machine-dimension extent actually placed
     offset: Coord
     bisection_links: int
+    predicted_contention: float = 0.0  # shared-link score (scored policies)
 
 
 class MachineState:
-    """Occupancy grid over the machine's allocation-unit torus."""
+    """Occupancy grid over the machine's allocation-unit torus.
+
+    A thin stateful wrapper around :mod:`repro.network.placement`: the grid,
+    the live placement table, and a lazily maintained background-traffic
+    load tensor (the sum of every placement's pairing traffic routed on the
+    machine torus) used by contention-scored allocation.
+    """
 
     def __init__(self, dims: Sequence[int]):
         self.dims = tuple(int(d) for d in dims)
         self.grid = np.zeros(self.dims, dtype=bool)
         self.placements: Dict[int, Placement] = {}
+        self._loads: Optional[np.ndarray] = None
 
     @property
     def free_units(self) -> int:
         return int((~self.grid).sum())
 
-    def _cells(self, oriented: Sequence[int], offset: Coord) -> Tuple[np.ndarray, ...]:
-        slices = [
-            np.array([(offset[k] + i) % self.dims[k] for i in range(oriented[k])])
-            for k in range(len(self.dims))
-        ]
-        mesh = np.meshgrid(*slices, indexing="ij")
-        return tuple(m.ravel() for m in mesh)
+    def cells(self, oriented: Sequence[int], offset: Coord) -> Tuple[np.ndarray, ...]:
+        return placement_cells(self.dims, oriented, offset)
 
     def find_placement(self, geometry: Sequence[int]) -> Optional[Tuple[Tuple[int, ...], Coord]]:
-        """First free translate of any orientation of the cuboid; None if full."""
-        g = canonical(geometry)
-        g = g + (1,) * (len(self.dims) - len(g))
-        for perm in sorted(set(itertools.permutations(g))):
-            if any(s > a for s, a in zip(perm, self.dims)):
-                continue
-            for offset in itertools.product(*(range(a) for a in self.dims)):
-                cells = self._cells(perm, offset)
-                if not self.grid[cells].any():
-                    return perm, offset
-        return None
+        """First free translate of any orientation of the cuboid; None if
+        full.  Identical choice to the brute-force reference scan; raises
+        ``ValueError`` if the geometry has more non-trivial dims than the
+        machine (the historical scan silently truncated it)."""
+        return first_fit(self.grid, geometry)
 
-    def allocate(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
-        spot = self.find_placement(geometry)
-        if spot is None:
-            return None
-        oriented, offset = spot
-        cells = self._cells(oriented, offset)
+    def traffic_loads(self) -> np.ndarray:
+        """(D, 2, *dims) link loads of all current placements' intra-job
+        all-to-all traffic on the machine torus (the scored policies'
+        background; see :func:`repro.network.placement.placement_loads`)."""
+        if self._loads is None:
+            total = np.zeros((len(self.dims), 2) + self.dims)
+            for p in self.placements.values():
+                total += placement_loads(self.dims, p.oriented, p.offset)
+            self._loads = total
+        return self._loads
+
+    def _commit(
+        self,
+        job_id: int,
+        geometry: Sequence[int],
+        oriented: Tuple[int, ...],
+        offset: Coord,
+        predicted_contention: float = 0.0,
+        bisection: Optional[int] = None,
+    ) -> Placement:
+        cells = self.cells(oriented, offset)
         self.grid[cells] = True
         p = Placement(
             job_id=job_id,
             geometry=canonical(geometry),
             oriented=oriented,
             offset=offset,
-            bisection_links=bisection_links(canonical(geometry)),
+            bisection_links=(
+                bisection_links(canonical(geometry)) if bisection is None else bisection
+            ),
+            predicted_contention=predicted_contention,
         )
         self.placements[job_id] = p
+        if self._loads is not None:
+            self._loads = self._loads + placement_loads(self.dims, oriented, offset)
         return p
+
+    def allocate(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
+        """First-fit allocation (reference-identical choice)."""
+        spot = self.find_placement(geometry)
+        if spot is None:
+            return None
+        oriented, offset = spot
+        return self._commit(job_id, geometry, oriented, offset)
+
+    def allocate_scored(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
+        """Contention/contact-scored allocation of one geometry."""
+        cand: Optional[ScoredPlacement] = best_placement(
+            self.grid, geometry, self.traffic_loads()
+        )
+        if cand is None:
+            return None
+        return self._commit(
+            job_id, geometry, cand.oriented, cand.offset, cand.contention
+        )
+
+    def commit(
+        self,
+        job_id: int,
+        geometry: Sequence[int],
+        oriented: Tuple[int, ...],
+        offset: Coord,
+        predicted_contention: float = 0.0,
+        bisection: Optional[int] = None,
+    ) -> Placement:
+        """Commit an externally chosen placement (e.g. from
+        :func:`repro.launch.mesh.plan_slice`), validating it first.
+
+        ``bisection`` overrides the recorded ``bisection_links`` when the
+        caller's fabric convention differs from the fully-wrapped torus
+        default (e.g. wrap-aware TPU slice bisection)."""
+        if job_id in self.placements:
+            raise ValueError(f"job {job_id} already placed")
+        oriented = tuple(int(w) for w in oriented)
+        if len(oriented) != len(self.dims) or any(
+            w < 1 or w > a for w, a in zip(oriented, self.dims)
+        ):
+            raise ValueError(f"orientation {oriented} does not fit machine {self.dims}")
+        if volume(oriented) != volume(pad_geometry(geometry, len(self.dims))):
+            raise ValueError(
+                f"orientation {oriented} is not an arrangement of geometry "
+                f"{canonical(geometry)}"
+            )
+        if self.grid[self.cells(oriented, offset)].any():
+            raise ValueError(
+                f"placement {oriented}@{offset} overlaps occupied cells"
+            )
+        return self._commit(
+            job_id, geometry, oriented, offset, predicted_contention, bisection
+        )
 
     def release(self, job_id: int) -> None:
         p = self.placements.pop(job_id)
-        cells = self._cells(p.oriented, p.offset)
-        self.grid[cells] = False
+        self.grid[self.cells(p.oriented, p.offset)] = False
+        self._loads = None  # recompute lazily; subtraction would drift
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +219,19 @@ class AllocationPolicy:
     def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
         """Geometries to try, in preference order."""
         raise NotImplementedError
+
+    def preferences_for(self, machine: MachineState, request: JobRequest) -> List[Geometry]:
+        """Request-aware preference list (hinted policies override)."""
+        return self.geometry_preferences(machine, request.units)
+
+    def allocate(self, machine: MachineState, request: JobRequest) -> Optional[Placement]:
+        """Place the request on the machine, or return None.  Default:
+        first-fit down the preference list."""
+        for g in self.preferences_for(machine, request):
+            placed = machine.allocate(request.job_id, g)
+            if placed is not None:
+                return placed
+        return None
 
 
 class ElongatedPolicy(AllocationPolicy):
@@ -169,6 +283,35 @@ class HintedPolicy(AllocationPolicy):
         pol = self.iso if contention_bound else self.any
         return pol.geometry_preferences(machine, units)
 
+    def preferences_for(self, machine: MachineState, request: JobRequest) -> List[Geometry]:
+        return self.geometry_preferences(machine, request.units, request.contention_bound)
+
+
+class ContentionScoredPolicy(AllocationPolicy):
+    """Isoperimetric geometry choice + contention/contact-scored placement.
+
+    Geometries are tried in bisection order (the paper's policy); within the
+    first geometry that fits, the placement engine scores every free
+    translate — predicted shared-link contention with existing placements
+    first, snugness (anti-fragmentation contact) as the tie-break — instead
+    of taking the first fit.
+    """
+
+    name = "contention-scored"
+
+    def __init__(self):
+        self._iso = IsoperimetricPolicy()
+
+    def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
+        return self._iso.geometry_preferences(machine, units)
+
+    def allocate(self, machine: MachineState, request: JobRequest) -> Optional[Placement]:
+        for g in self.preferences_for(machine, request):
+            placed = machine.allocate_scored(request.job_id, g)
+            if placed is not None:
+                return placed
+        return None
+
 
 # ---------------------------------------------------------------------------
 # Queue simulator.
@@ -198,6 +341,46 @@ class SimulationResult:
     def makespan(self) -> float:
         return max((j.end for j in self.jobs), default=0.0)
 
+    @property
+    def mean_wait(self) -> float:
+        """Mean queueing delay (start - arrival) over scheduled jobs."""
+        if not self.jobs:
+            return 0.0
+        return float(np.mean([j.start - j.request.arrival for j in self.jobs]))
+
+    @property
+    def mean_contention(self) -> float:
+        """Mean predicted shared-link contention score at placement time."""
+        if not self.jobs:
+            return 0.0
+        return float(np.mean([j.placement.predicted_contention for j in self.jobs]))
+
+
+_EPS = 1e-12
+
+
+def _reservation_time(
+    machine: MachineState,
+    prefs: List[Geometry],
+    running: List[Tuple[float, int, ScheduledJob]],
+    now: float,
+) -> Optional[float]:
+    """Earliest time the blocked request is guaranteed to fit: replay the
+    running jobs' completions (in end order) on a scratch grid until some
+    preferred geometry has a free translate.  None: never fits (not even on
+    an empty machine) — the request is impossible."""
+    if not prefs:
+        return None
+    scratch = machine.grid.copy()
+    for end, _, job in sorted(running):
+        p = job.placement
+        scratch[placement_cells(machine.dims, p.oriented, p.offset)] = False
+        if any(first_fit(scratch, g) is not None for g in prefs):
+            return end
+    if any(first_fit(scratch, g) is not None for g in prefs):
+        return now  # defensive: the caller only asks after a failed allocate
+    return None
+
 
 def simulate_queue(
     machine_dims: Sequence[int],
@@ -205,40 +388,51 @@ def simulate_queue(
     policy: AllocationPolicy,
     unit_node_dims: Optional[Sequence[int]] = None,
     link_bw: float = 1.0,
+    *,
+    backfill: bool = False,
+    measure_contention: bool = False,
 ) -> SimulationResult:
-    """FCFS queue simulation with exact cuboid placement.
+    """Online queue simulation with exact cuboid placement.
+
+    Event-driven: jobs arrive at ``request.arrival`` (all-zero arrivals
+    reproduce the historical FCFS batch semantics), are served head-of-line
+    FCFS, and with ``backfill=True`` a later job may start while the head is
+    blocked provided it completes before the head's reservation — EASY
+    backfill, so the head is never delayed by a backfilled job.
+
+    A request is rejected only if it cannot be placed even on an empty
+    machine (impossible geometry/size for this torus).
 
     ``unit_node_dims``: node dims per allocation unit (e.g. (4,4,4,4,2) for a
     BG/Q midplane); the contention proxy is evaluated at node level.
+
+    ``measure_contention=True`` additionally routes every placed job's
+    intra-job all-to-all traffic and records its volume on links shared
+    with the other placements live at start time
+    (``placement.predicted_contention``), so first-fit and scored policies
+    report a comparable interference number.
     """
     machine = MachineState(machine_dims)
     result = SimulationResult(policy=policy.name)
+    order = sorted(enumerate(jobs), key=lambda t: (t[1].arrival, t[0]))
+    arrivals = deque(req for _, req in order)
+    waiting: List[JobRequest] = []
+    running: List[Tuple[float, int, ScheduledJob]] = []  # heap by (end, seq)
+    seq = 0
     now = 0.0
-    running: List[ScheduledJob] = []
-    for req in jobs:
-        placed: Optional[Placement] = None
-        while placed is None:
-            if isinstance(policy, HintedPolicy):
-                prefs = policy.geometry_preferences(
-                    machine, req.units, req.contention_bound
-                )
-            else:
-                prefs = policy.geometry_preferences(machine, req.units)
-            for g in prefs:
-                placed = machine.allocate(req.job_id, g)
-                if placed is not None:
-                    break
-            if placed is None:
-                # advance time to the next completion and retry
-                running.sort(key=lambda j: j.end)
-                if not running:
-                    result.rejected.append(req.job_id)
-                    break
-                done = running.pop(0)
-                now = done.end
-                machine.release(done.request.job_id)
+
+    def try_start(req: JobRequest) -> bool:
+        nonlocal seq
+        placed = policy.allocate(machine, req)
         if placed is None:
-            continue
+            return False
+        if measure_contention:
+            job_loads = placement_loads(machine.dims, placed.oriented, placed.offset)
+            background = machine.traffic_loads() - job_loads
+            placed = dataclasses.replace(
+                placed,
+                predicted_contention=float(job_loads[background > _EPS].sum()),
+            )
         node_dims = _node_dims(placed.geometry, unit_node_dims)
         pred = predict_pairing_time(node_dims, 1.0, link_bw)
         job = ScheduledJob(
@@ -249,7 +443,57 @@ def simulate_queue(
             predicted_comm_time=pred.time_per_volume,
         )
         result.jobs.append(job)
-        running.append(job)
+        heapq.heappush(running, (job.end, seq, job))
+        seq += 1
+        return True
+
+    # (job_id, reservation) of a head whose allocate failed on the *current*
+    # grid: arrival-only wakes cannot newly fit it (the grid only changes on
+    # release), so the placement attempt and the completion-replay
+    # reservation are reused until a release invalidates them.  Backfill
+    # placements do not invalidate the reservation: a backfilled job ends by
+    # t_res, so its cells are free again when the head's reservation is due.
+    blocked: Optional[Tuple[int, float]] = None
+    while arrivals or waiting:
+        while arrivals and arrivals[0].arrival <= now + _EPS:
+            waiting.append(arrivals.popleft())
+        while waiting:
+            head = waiting[0]
+            if blocked is not None and blocked[0] == head.job_id:
+                t_res = blocked[1]
+            else:
+                if try_start(head):
+                    waiting.pop(0)
+                    continue
+                prefs = policy.preferences_for(machine, head)
+                t_res = _reservation_time(machine, prefs, running, now)
+                if t_res is None:
+                    result.rejected.append(head.job_id)
+                    waiting.pop(0)
+                    continue
+                blocked = (head.job_id, t_res)
+            if backfill:
+                kept: List[JobRequest] = []
+                for req in waiting[1:]:
+                    if not (now + req.duration <= t_res + _EPS and try_start(req)):
+                        kept.append(req)
+                waiting[1:] = kept
+            break
+        if not arrivals and not waiting:
+            break
+        next_times = []
+        if running:
+            next_times.append(running[0][0])
+        if arrivals:
+            next_times.append(arrivals[0].arrival)
+        # A blocked head implies a non-empty machine, hence running jobs; an
+        # empty waiting list implies pending arrivals — next_times is never
+        # empty here.
+        now = max(now, min(next_times))
+        while running and running[0][0] <= now + _EPS:
+            _, _, done = heapq.heappop(running)
+            machine.release(done.request.job_id)
+            blocked = None  # freed cells: the head is worth retrying
     return result
 
 

@@ -205,19 +205,29 @@ def slice_fabric(pod: TorusFabric, geometry_: Sequence[int]) -> TorusFabric:
     return TorusFabric(tuple(dims), tuple(wrap), pod.link_bw, pod.double_link_on_2)
 
 
+def ranked_slice_geometries(pod: TorusFabric, chips: int) -> list:
+    """All cuboid slice geometries of the requested size that fit the pod,
+    as (geometry, bisection_links) pairs, best first (max bisection, ties
+    broken toward the lexicographically-smallest canonical geometry).  This
+    single ranking backs both the geometry-only planner
+    (:func:`best_slice_geometry`) and the occupancy-aware planner
+    (``repro.launch.mesh.plan_slice``), so they cannot drift apart."""
+    ranked = sorted(
+        (
+            (g, slice_fabric(pod, g).bisection_links())
+            for g in geometry.sub_cuboids(pod.dims, chips)
+        ),
+        key=lambda t: (-t[1], t[0]),
+    )
+    if not ranked:
+        raise ValueError(f"no cuboid slice of {chips} chips fits in pod {pod.dims}")
+    return ranked
+
+
 def best_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
     """Among all cuboid slices of the requested size that fit the pod, return
-    the geometry with maximal internal bisection (links), with ties broken
-    toward balanced shapes."""
-    best: Optional[Tuple[Geometry, int]] = None
-    for g in geometry.sub_cuboids(pod.dims, chips):
-        fab = slice_fabric(pod, g)
-        b = fab.bisection_links()
-        if best is None or b > best[1] or (b == best[1] and g < best[0]):
-            best = (g, b)
-    if best is None:
-        raise ValueError(f"no cuboid slice of {chips} chips fits in pod {pod.dims}")
-    return best
+    the geometry with maximal internal bisection (links)."""
+    return ranked_slice_geometries(pod, chips)[0]
 
 
 def worst_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:

@@ -1,0 +1,90 @@
+"""The historical brute-force cuboid-placement scan, kept as a test oracle.
+
+This is the pre-refactor ``MachineState.find_placement`` loop from
+``repro.network.allocation`` (one Python iteration per orientation x torus
+offset, a meshgrid cell check per candidate), restructured so tests and the
+allocation micro-benchmark can ask for the *full* feasibility set, not just
+the first hit.  It exists only to validate the vectorized engine in
+``repro.network.placement`` — the equivalence property tests compare free
+sets and first-fit choices on random occupancy grids — and to anchor the
+allocation benchmark's speedup claim.  Do not use it in library code.
+
+The one intentional divergence from the historical code: a geometry with
+more non-trivial dimensions than the machine raises ``ValueError`` (the old
+scan silently truncated it; see the regression test), so oracle and engine
+agree on every input they accept.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.network.geometry import canonical
+
+Coord = Tuple[int, ...]
+
+
+def reference_pad_geometry(geometry: Sequence[int], ndim: int) -> Tuple[int, ...]:
+    g = canonical(geometry)
+    while len(g) > ndim and g[-1] == 1:
+        g = g[:-1]
+    if len(g) > ndim:
+        raise ValueError(
+            f"geometry {canonical(geometry)} has {len(g)} non-trivial dims; "
+            f"machine has only {ndim}"
+        )
+    return g + (1,) * (ndim - len(g))
+
+
+def reference_orientations(
+    geometry: Sequence[int], dims: Sequence[int]
+) -> List[Tuple[int, ...]]:
+    """The scan's orientation order: sorted distinct permutations that fit."""
+    dims = tuple(dims)
+    g = reference_pad_geometry(geometry, len(dims))
+    return [
+        perm
+        for perm in sorted(set(itertools.permutations(g)))
+        if not any(s > a for s, a in zip(perm, dims))
+    ]
+
+
+def reference_cells(
+    dims: Sequence[int], oriented: Sequence[int], offset: Coord
+) -> Tuple[np.ndarray, ...]:
+    """The historical meshgrid cell index for a placement."""
+    slices = [
+        np.array([(offset[k] + i) % dims[k] for i in range(oriented[k])])
+        for k in range(len(dims))
+    ]
+    mesh = np.meshgrid(*slices, indexing="ij")
+    return tuple(m.ravel() for m in mesh)
+
+
+def reference_free_offsets(grid: np.ndarray, oriented: Sequence[int]) -> List[Coord]:
+    """Every offset where the oriented cuboid covers only free cells, in the
+    scan's lexicographic (C) order."""
+    dims = grid.shape
+    out = []
+    for offset in itertools.product(*(range(a) for a in dims)):
+        cells = reference_cells(dims, oriented, offset)
+        if not grid[cells].any():
+            out.append(offset)
+    return out
+
+
+def reference_first_fit(
+    grid: np.ndarray, geometry: Sequence[int]
+) -> Optional[Tuple[Tuple[int, ...], Coord]]:
+    """First free translate of any orientation — the historical
+    ``find_placement`` body, verbatim semantics."""
+    dims = grid.shape
+    for perm in reference_orientations(geometry, dims):
+        for offset in itertools.product(*(range(a) for a in dims)):
+            cells = reference_cells(dims, perm, offset)
+            if not grid[cells].any():
+                return perm, offset
+    return None

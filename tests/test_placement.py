@@ -1,0 +1,433 @@
+"""Equivalence and property tests for the vectorized placement engine.
+
+Pins the agreement at the heart of the allocation refactor:
+
+    vectorized engine  ==  brute-force reference scan
+
+on random occupancy grids up to 4D — same feasibility set per orientation,
+identical first-fit choice under the reference's orientation/offset ordering
+— plus MachineState invariants under random allocate/release streams, the
+dimension-truncation regression, the contention scorer, and the online
+queue simulator (arrivals + EASY backfill).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from reference_placement import (
+    reference_first_fit,
+    reference_free_offsets,
+    reference_orientations,
+)
+
+from repro.network import (
+    ContentionScoredPolicy,
+    ElongatedPolicy,
+    IsoperimetricPolicy,
+    JobRequest,
+    MachineState,
+    simulate_queue,
+)
+from repro.network.geometry import volume
+from repro.network.placement import (
+    best_placement,
+    contention_field,
+    fabric_can_interfere,
+    first_fit,
+    free_offset_mask,
+    interference_mask,
+    is_spilling,
+    orientations,
+    pad_geometry,
+    placement_cells,
+    placement_loads,
+    shared_link_contention,
+    shell_contact,
+)
+
+
+def _random_case(rng):
+    """A random torus (<= 4D, <= ~120 cells), occupancy grid and geometry."""
+    nd = int(rng.integers(1, 5))
+    while True:
+        dims = tuple(int(rng.integers(1, 7)) for _ in range(nd))
+        if volume(dims) <= 120:
+            break
+    grid = rng.random(dims) < rng.random()
+    gdims = int(rng.integers(1, nd + 1))
+    geometry = tuple(int(rng.integers(1, max(dims) + 1)) for _ in range(gdims))
+    return dims, grid, geometry
+
+
+# ---------------------------------------------------------------------------
+# Engine == brute-force reference.
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_feasibility_set_matches_reference(seed):
+    """For every fitting orientation, the engine's free-offset set equals the
+    reference scan's, in the same (C) order."""
+    rng = np.random.default_rng(seed)
+    dims, grid, geometry = _random_case(rng)
+    ors = orientations(geometry, dims)
+    assert ors == reference_orientations(geometry, dims)
+    for o in ors:
+        free = free_offset_mask(grid, o)
+        got = [tuple(int(x) for x in idx) for idx in np.argwhere(free)]
+        assert got == reference_free_offsets(grid, o)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_first_fit_identical_to_reference(seed):
+    rng = np.random.default_rng(seed)
+    dims, grid, geometry = _random_case(rng)
+    assert first_fit(grid, geometry) == reference_first_fit(grid, geometry)
+
+
+def test_first_fit_none_when_full():
+    grid = np.ones((3, 3), dtype=bool)
+    assert first_fit(grid, (2, 1)) is None
+    grid[1, 1] = False  # a single free cell
+    assert first_fit(grid, (1, 1)) == ((1, 1), (1, 1))
+    assert first_fit(grid, (2, 1)) is None
+
+
+def test_free_offsets_wrap_around():
+    """Torus wraparound falls out of the circular correlation."""
+    grid = np.zeros(5, dtype=bool)
+    grid[1:4] = True  # free cells: 4, 0 (cyclic pair)
+    free = free_offset_mask(grid, (2,))
+    assert list(np.flatnonzero(free)) == [4]
+
+
+# ---------------------------------------------------------------------------
+# MachineState invariants under random allocate/release streams.
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), scored=st.sampled_from([False, True]))
+def test_property_machine_state_invariants(seed, scored):
+    """No cell double-booked, release exactly restores the grid, free_units
+    conserved, no placement overlaps an existing one."""
+    rng = np.random.default_rng(seed)
+    nd = int(rng.integers(1, 4))
+    dims = tuple(int(rng.integers(2, 6)) for _ in range(nd))
+    m = MachineState(dims)
+    live = {}
+    next_id = 0
+    for _ in range(30):
+        if live and rng.random() < 0.4:
+            job = int(rng.choice(list(live)))
+            expect = live.pop(job)
+            m.release(job)
+            assert not m.grid[expect].any()  # release restored those cells
+        else:
+            geometry = tuple(int(rng.integers(1, d + 1)) for d in dims)
+            if scored:
+                p = m.allocate_scored(next_id, geometry)
+            else:
+                p = m.allocate(next_id, geometry)
+            if p is not None:
+                cells = placement_cells(dims, p.oriented, p.offset)
+                # the placement covers exactly the requested volume and did
+                # not overlap any live placement
+                covered = np.zeros(dims, dtype=bool)
+                covered[cells] = True
+                assert int(covered.sum()) == volume(geometry)
+                for other in live.values():
+                    prev = np.zeros(dims, dtype=bool)
+                    prev[other] = True
+                    assert not (covered & prev).any()
+                live[next_id] = cells
+                next_id += 1
+        # global invariants after every step
+        union = np.zeros(dims, dtype=bool)
+        for cells in live.values():
+            union[cells] = True
+        assert np.array_equal(m.grid, union)
+        assert m.free_units == volume(dims) - int(union.sum())
+    for job in list(live):
+        m.release(job)
+    assert m.free_units == volume(dims)
+    assert not m.grid.any()
+
+
+# ---------------------------------------------------------------------------
+# Regression: dimension truncation bug.
+# ---------------------------------------------------------------------------
+def test_geometry_with_more_dims_than_machine_raises():
+    """The historical scan silently truncated extra axes (the trailing-1 pad
+    is a no-op for negative counts), allocating fewer cells than requested;
+    now it raises."""
+    m = MachineState((4, 4))
+    with pytest.raises(ValueError):
+        m.find_placement((2, 2, 2))
+    with pytest.raises(ValueError):
+        m.allocate(0, (2, 2, 2))
+    with pytest.raises(ValueError):
+        m.allocate_scored(0, (2, 2, 2))
+    with pytest.raises(ValueError):
+        pad_geometry((2, 2, 2), 2)
+    from reference_placement import reference_pad_geometry
+
+    with pytest.raises(ValueError):
+        reference_pad_geometry((2, 2, 2), 2)
+
+
+def test_commit_validates_orientation_and_volume():
+    """MachineState.commit must reject orientations that wrap-alias (w > a)
+    or that are not an arrangement of the declared geometry — the same
+    silent-truncation class as the find_placement bug."""
+    m = MachineState((4, 4))
+    with pytest.raises(ValueError):
+        m.commit(0, (6, 1), (6, 1), (0, 0))  # 6 > 4: cells would alias
+    with pytest.raises(ValueError):
+        m.commit(0, (2, 2), (2, 1), (0, 0))  # volume mismatch
+    p = m.commit(0, (2, 2), (2, 2), (1, 1))
+    assert p is not None and m.free_units == 12
+    with pytest.raises(ValueError):
+        m.commit(1, (2, 2), (2, 2), (0, 0))  # overlaps
+    with pytest.raises(ValueError):
+        m.commit(0, (1, 1), (1, 1), (0, 0))  # job already placed
+
+
+def test_plan_slice_job_id_requires_state():
+    from repro.launch.mesh import plan_slice
+
+    with pytest.raises(ValueError):
+        plan_slice(16, job_id=7)
+
+
+def test_trailing_ones_are_stripped_not_errors():
+    m = MachineState((4, 4))
+    assert pad_geometry((2, 2, 1, 1), 2) == (2, 2)
+    p = m.allocate(0, (2, 2, 1, 1))
+    assert p is not None and m.free_units == 12
+    # and padding up still works
+    assert pad_geometry((3,), 2) == (3, 1)
+
+
+# ---------------------------------------------------------------------------
+# Scoring: contact, contention field, the isolation theorem.
+# ---------------------------------------------------------------------------
+def test_shell_contact_counts_occupied_shell():
+    grid = np.zeros((5, 5), dtype=bool)
+    grid[0, :2] = True  # a 1x2 block at the origin
+    contact = shell_contact(grid, (2, 2))
+    # placing a 2x2 at (1, 0) touches both occupied cells from below
+    assert contact[1, 0] == 2
+    # a placement whose (wrapping) shell avoids row 0 touches nothing
+    assert contact[2, 2] == 0
+    # the shell wraps: a 2x2 at (3, 3) reaches row 0 via the torus edge
+    assert contact[3, 3] == 1
+
+
+def test_pairing_traffic_is_isolated():
+    """Under minimal DOR, intra-cuboid pairing traffic of disjoint cuboid
+    placements never shares a link: pairing distances never exceed half a
+    ring, so routes stay on the placement's own cells (the paper's
+    partition-isolation property, recovered by the model)."""
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        nd = int(rng.integers(1, 4))
+        dims = tuple(int(rng.integers(2, 8)) for _ in range(nd))
+        m = MachineState(dims)
+        placements = []
+        for job in range(4):
+            geometry = tuple(int(rng.integers(1, d + 1)) for d in dims)
+            p = m.allocate(job, geometry)
+            if p is not None:
+                placements.append(p)
+        loads = [
+            placement_loads(dims, p.oriented, p.offset, pattern="pairing")
+            for p in placements
+        ]
+        for i, j in itertools.combinations(range(len(loads)), 2):
+            assert shared_link_contention(loads[i], loads[j]) == 0.0
+            assert shared_link_contention(loads[j], loads[i]) == 0.0
+
+
+def test_all_to_all_spill_shares_links():
+    """Beyond-half-ring spans route all-to-all traffic through foreign
+    territory: a 5-strip on JUQUEEN's 7-ring genuinely shares links with a
+    neighbour in its spill corridor (this is what the scorer minimises)."""
+    dims = (7, 2, 2, 2)
+    strip = placement_loads(dims, (5, 2, 2, 2), (0, 0, 0, 0))
+    neighbour = placement_loads(dims, (2, 2, 2, 2), (5, 0, 0, 0))
+    assert shared_link_contention(neighbour, strip) > 0.0
+
+
+def test_is_spilling_and_fabric_can_interfere():
+    assert is_spilling((5, 1), (7, 2))
+    assert not is_spilling((7, 1), (7, 2))  # full ring wraps internally
+    assert not is_spilling((4, 2), (7, 2))  # 2*4-2 = 6 < 7
+    # exactly-half spans spill too: split ties route half the volume the
+    # long way around (2*5-2 == 8)
+    assert is_spilling((5, 2), (8, 2))
+    assert fabric_can_interfere((7, 2, 2, 2))
+    assert fabric_can_interfere((8, 2))
+    assert not fabric_can_interfere((4, 4, 3, 2))  # Mira: isolated, all jobs
+    # a 5-ring can spill (w=4) but never share: only one free position
+    assert is_spilling((4, 1), (5, 2))
+    assert not fabric_can_interfere((5, 4))
+
+
+def test_even_ring_tie_spill_shares_links():
+    """The 2w-2 == a boundary: on an 8-ring a 5-span's split-tie traffic
+    routes through the 3 free positions, where a disjoint 3-span neighbour
+    has its own dim-0 traffic — they share links."""
+    dims = (8, 2)
+    A = placement_loads(dims, (5, 2), (0, 0))
+    B = placement_loads(dims, (3, 2), (5, 0))
+    assert shared_link_contention(A, B) > 0.0
+    assert shared_link_contention(B, A) > 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_contention_field_matches_direct_sum(seed):
+    """The FFT cross-correlation equals the direct per-offset computation:
+    job loads at that offset summed over the interference mask."""
+    rng = np.random.default_rng(seed)
+    nd = int(rng.integers(1, 4))
+    dims = tuple(int(rng.integers(2, 6)) for _ in range(nd))
+    if volume(dims) > 100:
+        return
+    m = MachineState(dims)
+    for job in range(3):
+        geometry = tuple(int(rng.integers(1, d + 1)) for d in dims)
+        m.allocate(job, geometry)
+    mask = interference_mask(m.grid, m.traffic_loads())
+    oriented = tuple(int(rng.integers(1, d + 1)) for d in dims)
+    field = contention_field(dims, oriented, mask)
+    for _ in range(5):
+        offset = tuple(int(rng.integers(0, d)) for d in dims)
+        direct = float(placement_loads(dims, oriented, offset)[mask].sum())
+        assert field[offset] == pytest.approx(direct, abs=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_placement_loads_translation_invariant(seed):
+    """placement_loads rolls a memoised origin field; the roll must equal
+    routing the translated traffic directly (DOR is translation-covariant,
+    including split ties)."""
+    from repro.network.placement import placement_all_to_all_traffic
+    from repro.network.routing import route_dor
+
+    rng = np.random.default_rng(seed)
+    nd = int(rng.integers(1, 4))
+    dims = tuple(int(rng.integers(2, 7)) for _ in range(nd))
+    oriented = tuple(int(rng.integers(1, d + 1)) for d in dims)
+    offset = tuple(int(rng.integers(0, d)) for d in dims)
+    rolled = placement_loads(dims, oriented, offset)
+    src, dst, vol = placement_all_to_all_traffic(dims, oriented, offset)
+    if src.shape[0]:
+        direct = route_dor(dims, src, dst, vol)
+    else:
+        direct = np.zeros_like(rolled)
+    assert np.allclose(rolled, direct, atol=1e-9)
+
+
+def test_scored_placement_avoids_spill_corridor():
+    """With a 5-strip at the origin of JUQUEEN's torus, the scorer routes a
+    new job onto untouched lines instead of the strip's spill corridor."""
+    dims = (7, 2, 2, 2)
+    m = MachineState(dims)
+    assert m.allocate(0, (5, 1, 1, 1)) is not None  # strip on line (0,0,0)
+    p = m.allocate_scored(1, (2, 1, 1, 1))
+    assert p is not None
+    assert p.predicted_contention == pytest.approx(0.0, abs=1e-9)
+    # the chosen line is not the strip's spill corridor
+    assert p.offset[1:] != (0, 0, 0)
+
+
+def test_best_placement_deterministic_and_respects_occupancy():
+    rng = np.random.default_rng(5)
+    grid = rng.random((6, 6)) < 0.2
+    bg = np.zeros((2, 2, 6, 6))
+    a = best_placement(grid, (3, 2), bg)
+    b = best_placement(grid, (3, 2), bg)
+    assert a == b
+    assert a is not None
+    assert not grid[placement_cells(grid.shape, a.oriented, a.offset)].any()
+
+
+# ---------------------------------------------------------------------------
+# Online queue simulator: arrivals + EASY backfill.
+# ---------------------------------------------------------------------------
+def test_arrivals_delay_start():
+    res = simulate_queue((4, 4), [JobRequest(0, 4, duration=1.0, arrival=5.0)],
+                         IsoperimetricPolicy())
+    assert res.jobs[0].start == 5.0
+    assert res.mean_wait == 0.0
+
+
+def test_backfill_jumps_short_job_without_delaying_head():
+    jobs = [
+        JobRequest(0, 12, duration=4.0),  # fills 12 of 16
+        JobRequest(1, 8, duration=2.0),   # blocked head (only 4 free)
+        JobRequest(2, 4, duration=3.0),   # fits now, ends before reservation
+        JobRequest(3, 4, duration=9.0),   # fits now but would overrun -> held
+    ]
+    plain = simulate_queue((4, 4), jobs, IsoperimetricPolicy())
+    eased = simulate_queue((4, 4), jobs, IsoperimetricPolicy(), backfill=True)
+    s_plain = {j.request.job_id: j.start for j in plain.jobs}
+    s_eased = {j.request.job_id: j.start for j in eased.jobs}
+    assert s_plain[2] > 0.0 and s_eased[2] == 0.0  # short job backfilled
+    assert s_eased[1] == s_plain[1]  # head not delayed
+    assert s_eased[3] >= s_eased[1]  # long job correctly held back
+
+
+def test_impossible_job_rejected_queue_continues():
+    res = simulate_queue(
+        (2, 2), [JobRequest(0, 5), JobRequest(1, 2)], IsoperimetricPolicy()
+    )
+    assert res.rejected == [0]
+    assert [j.request.job_id for j in res.jobs] == [1]
+
+
+def test_fcfs_order_preserved_without_backfill():
+    jobs = [JobRequest(i, 4, duration=1.0) for i in range(4)]
+    res = simulate_queue((2, 2), jobs, IsoperimetricPolicy())
+    starts = [j.start for j in res.jobs]
+    assert starts == sorted(starts)
+    assert [j.request.job_id for j in res.jobs] == [0, 1, 2, 3]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_queue_simulation_is_consistent(seed):
+    """Random streams: placements of concurrently running jobs never overlap
+    and every scheduled job respects its arrival time."""
+    rng = np.random.default_rng(seed)
+    dims = (4, 3, 2)
+    jobs = [
+        JobRequest(
+            i,
+            int(rng.integers(1, 13)),
+            True,
+            float(rng.random() + 0.1),
+            float(rng.random() * 5),
+        )
+        for i in range(20)
+    ]
+    policy = ContentionScoredPolicy() if seed % 2 else ElongatedPolicy()
+    res = simulate_queue(dims, jobs, policy, backfill=bool(seed % 3))
+    assert len(res.jobs) + len(res.rejected) == len(jobs)
+    for job in res.jobs:
+        assert job.start + 1e-9 >= job.request.arrival
+    intervals = [
+        (j.start, j.end, placement_cells(dims, j.placement.oriented, j.placement.offset))
+        for j in res.jobs
+    ]
+    for (s1, e1, c1), (s2, e2, c2) in itertools.combinations(intervals, 2):
+        if s1 < e2 - 1e-9 and s2 < e1 - 1e-9:  # concurrent
+            g1 = np.zeros(dims, dtype=bool)
+            g1[c1] = True
+            g2 = np.zeros(dims, dtype=bool)
+            g2[c2] = True
+            assert not (g1 & g2).any()
