@@ -19,6 +19,7 @@ from benchmarks.paper_tables import (
     tpu_slice_geometry,
 )
 from benchmarks.bench_allocation import allocation_microbench
+from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_routing import routing_microbench
 from benchmarks.matmul_scaling import fig5_matmul, fig6_strong_scaling
 from benchmarks.roofline_report import dryrun_matrix, roofline_table
@@ -34,6 +35,7 @@ BENCHMARKS = [
     ("tpu_slice_geometry", tpu_slice_geometry),
     ("routing_microbench", routing_microbench),
     ("allocation_microbench", allocation_microbench),
+    ("mapping_microbench", mapping_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]

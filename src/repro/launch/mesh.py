@@ -32,10 +32,12 @@ from repro.network import (
     CollectiveCostModel,
     MachineState,
     Placement,
+    RankMapping,
     TorusFabric,
     assign_axes,
     best_placement,
     best_slice_geometry,
+    map_ranks,
     slice_fabric,
     worst_slice_geometry,
 )
@@ -72,6 +74,7 @@ class MeshPlan:
     assignment: AxisAssignment
     cost_model: CollectiveCostModel
     placement: Optional[Placement] = None  # set by occupancy-aware planning
+    mapping: Optional[RankMapping] = None  # rank->chip embedding (with placement)
 
     @property
     def avoidable_contention(self) -> float:
@@ -85,6 +88,13 @@ class MeshPlan:
         """Shared-link contention score of the planned placement (0 when the
         plan was geometry-only or the pod was empty)."""
         return self.placement.predicted_contention if self.placement else 0.0
+
+    @property
+    def mapping_congestion(self) -> float:
+        """Predicted intra-job max link load of the chosen rank mapping
+        under the mesh's ring-collective (logical halo) traffic; 0.0 for
+        geometry-only plans, which carry no concrete cells to map onto."""
+        return self.mapping.score.congestion if self.mapping else 0.0
 
 
 def plan_slice(
@@ -106,6 +116,15 @@ def plan_slice(
     fabrics, which real pods, with their >= 6 rings, are not; see
     :func:`repro.network.placement.best_placement`).  Passing ``job_id``
     commits the chosen placement to ``state``.
+
+    Occupancy-aware plans also carry a **rank mapping**
+    (:func:`repro.network.map_ranks`): logical mesh ranks — raveled
+    row-major over the (data, model) mesh shape — are embedded onto the
+    placement's chips minimising ring-collective (logical halo)
+    congestion, and the axis assignment prices collectives with the
+    mapping's *measured* stride/wrap instead of assuming a contiguous
+    wrapped ring.  Geometry-only plans keep ``mapping=None`` and the
+    assumed embedding (the empty-pod answer is unchanged).
     """
     pod = pod or pod_fabric()
     placement: Optional[Placement] = None
@@ -148,7 +167,24 @@ def plan_slice(
     # slice dims (largest dim -> data).
     dims = sorted(fabric.dims, reverse=True)
     axes = {"data": dims[0], "model": chips // dims[0]}
-    assignment = assign_axes(fabric, axes, order_hint=["model", "data"])
+    mapping = None
+    if placement is not None:
+        # Embed the logical (data, model) mesh onto the placed chips:
+        # minimise ring-collective congestion (logical halo traffic), then
+        # let the axis assignment price collectives with the measured
+        # stride/wrap of the chosen mapping.
+        mapping = map_ranks(
+            pod.dims,
+            placement.oriented,
+            placement.offset,
+            logical_dims=(axes["data"], axes["model"]),
+            pattern="halo",
+            double_link_on_2=pod.double_link_on_2,
+            wrap=pod.wrap,
+        )
+    assignment = assign_axes(
+        fabric, axes, order_hint=["model", "data"], mapping=mapping
+    )
     return MeshPlan(
         slice_geometry=geom,
         slice_bisection_links=bis,
@@ -157,6 +193,7 @@ def plan_slice(
         assignment=assignment,
         cost_model=CollectiveCostModel(fabric, assignment),
         placement=placement,
+        mapping=mapping,
     )
 
 

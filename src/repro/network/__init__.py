@@ -17,6 +17,9 @@ Single home of every geometry / fabric / routing primitive in the repo
                 circular windowed sums, contention/contact scoring.
   allocation  — partition allocation policies and the online queue
                 simulator (arrival streams, EASY backfill).
+  mapping     — topology-aware rank mapping inside a placement: strategy
+                catalogue (identity / axis-permutation / gray-snake /
+                greedy refinement) scored by congestion + dilation.
 
 The historical ``repro.core.{torus,contention,collectives,allocation}``
 modules re-export from here and are deprecated.
@@ -96,6 +99,21 @@ from .placement import (
     placement_cells,
     placement_loads,
     shell_contact,
+)
+from .mapping import (
+    MAPPING_PATTERNS,
+    MappingScore,
+    RankMapping,
+    axis_permutation_orders,
+    identity_mapping,
+    map_ranks,
+    mapping_loads,
+    mesh_axis_hops,
+    pattern_traffic,
+    placement_cell_coords,
+    score_mapping,
+    snake_mapping,
+    toroidal_hops,
 )
 from .allocation import (
     AllocationPolicy,

@@ -51,7 +51,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .geometry import Geometry, bisection_links, canonical, sub_cuboids, volume
+from .geometry import Geometry, bisection_links, canonical, sub_cuboids
+from .mapping import RankMapping, map_ranks
 from .placement import (
     ScoredPlacement,
     best_placement,
@@ -67,6 +68,11 @@ Coord = Tuple[int, ...]
 
 @dataclass(frozen=True)
 class JobRequest:
+    """One job in the queue: ``units`` allocation units (midplanes/chips),
+    an ``arrival`` timestamp and a ``duration``, both in the simulator's
+    abstract time units; ``contention_bound`` is the Section-5 scheduler
+    hint consumed by :class:`HintedPolicy`."""
+
     job_id: int
     units: int  # allocation units (midplanes / chips)
     contention_bound: bool = True
@@ -76,6 +82,12 @@ class JobRequest:
 
 @dataclass(frozen=True)
 class Placement:
+    """A committed allocation: canonical ``geometry``, the per-machine-dim
+    ``oriented`` extents actually placed at ``offset`` (cells may wrap),
+    its internal ``bisection_links`` (links, not bandwidth) and the
+    ``predicted_contention`` shared-link score (traffic-volume units; 0.0
+    for unscored policies)."""
+
     job_id: int
     geometry: Geometry  # canonical (sorted desc)
     oriented: Tuple[int, ...]  # per-machine-dimension extent actually placed
@@ -191,7 +203,7 @@ class MachineState:
             w < 1 or w > a for w, a in zip(oriented, self.dims)
         ):
             raise ValueError(f"orientation {oriented} does not fit machine {self.dims}")
-        if volume(oriented) != volume(pad_geometry(geometry, len(self.dims))):
+        if tuple(sorted(oriented, reverse=True)) != pad_geometry(geometry, len(self.dims)):
             raise ValueError(
                 f"orientation {oriented} is not an arrangement of geometry "
                 f"{canonical(geometry)}"
@@ -214,6 +226,9 @@ class MachineState:
 # Policies.
 # ---------------------------------------------------------------------------
 class AllocationPolicy:
+    """Base policy: a preference-ordered geometry list per request, placed
+    first-fit down the list (scored policies override :meth:`allocate`)."""
+
     name = "base"
 
     def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
@@ -323,6 +338,7 @@ class ScheduledJob:
     start: float
     end: float
     predicted_comm_time: float  # pairing-benchmark proxy, seconds/byte
+    mapping: Optional[RankMapping] = None  # set when the simulator maps ranks
 
 
 @dataclass
@@ -333,12 +349,15 @@ class SimulationResult:
 
     @property
     def mean_comm_time(self) -> float:
+        """Mean predicted pairing-benchmark time over scheduled jobs
+        (seconds per byte of per-pair message volume)."""
         if not self.jobs:
             return 0.0
         return float(np.mean([j.predicted_comm_time for j in self.jobs]))
 
     @property
     def makespan(self) -> float:
+        """Completion time of the last job (simulator time units)."""
         return max((j.end for j in self.jobs), default=0.0)
 
     @property
@@ -391,6 +410,8 @@ def simulate_queue(
     *,
     backfill: bool = False,
     measure_contention: bool = False,
+    mapping_pattern: Optional[str] = None,
+    double_link_on_2: bool = True,
 ) -> SimulationResult:
     """Online queue simulation with exact cuboid placement.
 
@@ -411,7 +432,30 @@ def simulate_queue(
     with the other placements live at start time
     (``placement.predicted_contention``), so first-fit and scored policies
     report a comparable interference number.
+
+    ``mapping_pattern`` (requires ``measure_contention=True``) applies a
+    per-job rank mapping when computing that measured number: each placed
+    job's traffic is the named pattern (:data:`repro.network.mapping.
+    MAPPING_PATTERNS`) on its logical grid, embedded by
+    :func:`repro.network.map_ranks` (congestion-minimising), and the
+    shared-link volume is measured against the *mapped* loads of the jobs
+    live at start time — all-to-all is mapping-invariant, so this is how
+    mapping-sensitive workloads (halo, ring, pairing) are replayed.  The
+    chosen mapping is recorded on ``ScheduledJob.mapping``.
+    ``double_link_on_2`` is the machine's link convention for the mapping
+    engine's congestion metric: True (default) models BG/Q's two parallel
+    links on length-2 dimensions; TPU-style single-link fabrics pass
+    False.
+
+    Example (two 4-midplane jobs on a tiny torus, FCFS, no backfill):
+
+    >>> jobs = [JobRequest(0, 4, duration=1.0), JobRequest(1, 4, duration=1.0)]
+    >>> res = simulate_queue((2, 2, 2), jobs, IsoperimetricPolicy())
+    >>> [(j.placement.geometry, j.start) for j in res.jobs]
+    [((2, 2, 1), 0.0), ((2, 2, 1), 0.0)]
     """
+    if mapping_pattern is not None and not measure_contention:
+        raise ValueError("mapping_pattern requires measure_contention=True")
     machine = MachineState(machine_dims)
     result = SimulationResult(policy=policy.name)
     order = sorted(enumerate(jobs), key=lambda t: (t[1].arrival, t[0]))
@@ -421,14 +465,40 @@ def simulate_queue(
     seq = 0
     now = 0.0
 
+    # Live per-job *mapped* loads (mapping_pattern only): the measured
+    # shared-link background under a mapping is the running sum of these,
+    # not the all-to-all tensor MachineState maintains for placement
+    # scoring.  The total is maintained incrementally (add on start,
+    # subtract on release); cancellation residue is ~1e-13 at replay
+    # magnitudes, well under the _EPS=1e-12 sharing threshold.
+    live_mapped: Dict[int, np.ndarray] = {}
+    mapped_total = (
+        np.zeros((len(machine.dims), 2) + machine.dims)
+        if mapping_pattern is not None
+        else None
+    )
+
     def try_start(req: JobRequest) -> bool:
-        nonlocal seq
+        nonlocal seq, mapped_total
         placed = policy.allocate(machine, req)
         if placed is None:
             return False
+        mapping: Optional[RankMapping] = None
         if measure_contention:
-            job_loads = placement_loads(machine.dims, placed.oriented, placed.offset)
-            background = machine.traffic_loads() - job_loads
+            if mapping_pattern is not None:
+                mapping = map_ranks(
+                    machine.dims, placed.oriented, placed.offset,
+                    pattern=mapping_pattern, double_link_on_2=double_link_on_2,
+                )
+                job_loads = mapping.loads
+                background = np.maximum(mapped_total, 0.0)
+                live_mapped[placed.job_id] = job_loads
+                mapped_total += job_loads
+            else:
+                job_loads = placement_loads(
+                    machine.dims, placed.oriented, placed.offset
+                )
+                background = machine.traffic_loads() - job_loads
             placed = dataclasses.replace(
                 placed,
                 predicted_contention=float(job_loads[background > _EPS].sum()),
@@ -441,6 +511,7 @@ def simulate_queue(
             start=now,
             end=now + req.duration,
             predicted_comm_time=pred.time_per_volume,
+            mapping=mapping,
         )
         result.jobs.append(job)
         heapq.heappush(running, (job.end, seq, job))
@@ -493,6 +564,9 @@ def simulate_queue(
         while running and running[0][0] <= now + _EPS:
             _, _, done = heapq.heappop(running)
             machine.release(done.request.job_id)
+            released = live_mapped.pop(done.request.job_id, None)
+            if released is not None:
+                mapped_total -= released
             blocked = None  # freed cells: the head is worth retrying
     return result
 

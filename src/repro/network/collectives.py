@@ -59,6 +59,36 @@ class AxisEmbedding:
         base = 1.0 / self.stride
         return base
 
+    @classmethod
+    def from_mapping(cls, mapping, mesh_shape: Sequence[int], axis: int) -> "AxisEmbedding":
+        """Embedding measured from an explicit rank mapping.
+
+        ``mapping`` is a :class:`repro.network.mapping.RankMapping` (or
+        anything with ``dims``, ``coords`` and optional per-dimension
+        ``wrap`` flags); ranks are raveled row-major over ``mesh_shape``.
+        ``stride`` is the *max* physical hop count between consecutive
+        ranks along the axis (conservative: the slowest neighbour step
+        paces a ring collective), and the embedding counts as ``wrapped``
+        only when the ring-closing step is no longer than the interior
+        ones — a cheap wrap is what lets both directions be used.  Hop
+        counts honour the mapping's ``wrap`` flags, so a closing step
+        never rides a wrap link the fabric does not have.
+        """
+        from .mapping import mesh_axis_hops
+
+        size = int(mesh_shape[axis])
+        if size <= 1:
+            return cls(size=size, stride=1, wrapped=True)
+        interior, wrap = mesh_axis_hops(
+            mapping.dims, mapping.coords, mesh_shape, axis,
+            getattr(mapping, "wrap", None),
+        )
+        return cls(
+            size=size,
+            stride=max(1, interior),
+            wrapped=0 < wrap <= max(1, interior),
+        )
+
 
 def ring_all_gather_time(bytes_out: float, emb: AxisEmbedding, link_bw: float) -> float:
     """Time to all-gather so each chip ends with ``bytes_out`` total
@@ -134,6 +164,7 @@ class AxisAssignment:
     embeddings: Tuple[AxisEmbedding, ...]
 
     def embedding(self, axis: str) -> AxisEmbedding:
+        """The embedding of one logical axis, looked up by name."""
         return self.embeddings[self.axis_names.index(axis)]
 
 
@@ -141,6 +172,7 @@ def assign_axes(
     fabric: TorusFabric,
     axis_sizes: Dict[str, int],
     order_hint: Optional[Sequence[str]] = None,
+    mapping=None,
 ) -> AxisAssignment:
     """Greedy optimal-by-construction assignment of mesh axes to physical dims.
 
@@ -151,6 +183,14 @@ def assign_axes(
     physical dims is embedded as a snake: wrapped iff all its dims wrap, and
     contiguous (stride 1) because the snake traverses physically adjacent
     chips.
+
+    ``mapping`` (a :class:`repro.network.mapping.RankMapping` over the same
+    rank count, ranks raveled row-major over ``axis_sizes`` in insertion
+    order) replaces each axis's *assumed* stride-1/wrapped embedding with
+    the measured one (:meth:`AxisEmbedding.from_mapping`): a mapping that
+    folds an axis pays its real stride, and a ring only counts as wrapped
+    when its closing step is as cheap as its interior steps.  The
+    dimension grouping itself stays geometric.
     """
     names = list(order_hint) if order_hint else sorted(
         axis_sizes, key=lambda a: -axis_sizes[a]
@@ -173,13 +213,19 @@ def assign_axes(
         groups[name] = got
         for i in got:
             remaining.remove(i)
+    ordered = tuple(axis_sizes.keys())
+    mesh_shape = tuple(axis_sizes[n] for n in ordered)
     embeddings = {}
     for name in names:
         size = axis_sizes[name]
         dims = groups[name]
-        wrapped = all(fabric.wrap[i] for i in dims) if dims else True
-        embeddings[name] = AxisEmbedding(size=size, stride=1, wrapped=wrapped)
-    ordered = tuple(axis_sizes.keys())
+        if mapping is not None:
+            embeddings[name] = AxisEmbedding.from_mapping(
+                mapping, mesh_shape, ordered.index(name)
+            )
+        else:
+            wrapped = all(fabric.wrap[i] for i in dims) if dims else True
+            embeddings[name] = AxisEmbedding(size=size, stride=1, wrapped=wrapped)
     return AxisAssignment(
         axis_names=ordered,
         axis_sizes=tuple(axis_sizes[n] for n in ordered),
@@ -212,6 +258,8 @@ class CollectiveCostModel:
     assignment: AxisAssignment
 
     def time(self, collective: str, axis: str, bytes_in: float) -> float:
+        """Seconds for one collective (:data:`COLLECTIVE_TIME` key) of
+        ``bytes_in`` per-chip bytes over the named logical axis."""
         emb = self.assignment.embedding(axis)
         fn = COLLECTIVE_TIME[collective]
         return fn(bytes_in, emb, self.fabric.link_bw)

@@ -38,7 +38,21 @@ POD_DCI_BW = 12.5e9  # inter-pod (data-center network) per-chip share, est.
 
 @dataclass(frozen=True)
 class TorusFabric:
-    """A physical torus (or mesh) fabric: a machine, a pod, or a slice."""
+    """A physical torus (or mesh) fabric: a machine, a pod, or a slice.
+
+    ``dims`` are chip/midplane counts per dimension, ``wrap`` flags the
+    presence of the wrap-around link per dimension, ``link_bw`` is bytes/s
+    per link per direction, and ``double_link_on_2`` selects the Blue
+    Gene/Q convention (two parallel links on a length-2 dimension) vs the
+    TPU ICI single link.
+
+    >>> bgq = TorusFabric.bgq((4, 4, 4))
+    >>> bgq.num_chips, bgq.bisection_links()
+    (64, 32)
+    >>> chain = TorusFabric.tpu((4, 2), wrap=(True, False))
+    >>> chain.bisection_links()  # unwrapped dim is cut once, not twice
+    4
+    """
 
     dims: Tuple[int, ...]
     wrap: Tuple[bool, ...]  # wrap-around link present per dimension
@@ -71,15 +85,17 @@ class TorusFabric:
     # -- basic quantities ------------------------------------------------------
     @property
     def num_chips(self) -> int:
+        """Number of allocation units (chips / midplanes) in the fabric."""
         return volume(self.dims)
 
-    # alias for graph-flavoured callers
     @property
     def num_vertices(self) -> int:
+        """Alias of :attr:`num_chips` for graph-flavoured callers."""
         return self.num_chips
 
     @property
     def is_fully_wrapped(self) -> bool:
+        """Whether every non-trivial dimension keeps its wrap-around link."""
         return all(self.wrap[k] for k, a in enumerate(self.dims) if a > 1)
 
     def links_across_dim(self, k: int) -> int:
@@ -116,9 +132,11 @@ class TorusFabric:
 
     # -- geometry delegation ---------------------------------------------------
     def contains_cuboid(self, cuboid: Sequence[int]) -> bool:
+        """Whether the cuboid geometry fits this fabric (up to rotation)."""
         return geometry.contains_cuboid(self.dims, cuboid)
 
     def sub_cuboids(self, size: int) -> Iterator[Geometry]:
+        """All canonical cuboid geometries of ``size`` units that fit."""
         return geometry.sub_cuboids(self.dims, size)
 
 
@@ -231,6 +249,8 @@ def best_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
 
 
 def worst_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
+    """The fitting cuboid slice with *minimal* internal bisection (links) —
+    the adversarial baseline of the avoidable-contention ratio."""
     worst: Optional[Tuple[Geometry, int]] = None
     for g in geometry.sub_cuboids(pod.dims, chips):
         fab = slice_fabric(pod, g)

@@ -39,6 +39,7 @@ def canonical(dims: Iterable[int]) -> Geometry:
 
 
 def volume(dims: Iterable[int]) -> int:
+    """Vertex count of the torus/cuboid: the product of dimension lengths."""
     return math.prod(dims)
 
 
@@ -237,10 +238,13 @@ def factorizations(n: int, max_parts: int) -> Iterator[Geometry]:
 
 
 def all_divisor_geometries(n: int, D: int) -> List[Geometry]:
+    """All canonical cuboid geometries of n vertices with <= D dimensions,
+    sorted descending (most elongated first)."""
     return sorted(set(factorizations(n, D)), reverse=True)
 
 
 def enumerate_vertices(dims: Sequence[int]) -> Iterator[Tuple[int, ...]]:
+    """All vertex coordinate tuples, in C (row-major, last dim fastest) order."""
     yield from itertools.product(*(range(a) for a in dims))
 
 

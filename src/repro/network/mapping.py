@@ -1,0 +1,579 @@
+"""Topology-aware rank mapping inside an allocated placement.
+
+PR 1–2 model what the *allocator* controls: which cuboid geometry a job
+gets and where it lands.  This module models what the *mapping* controls:
+which rank of the job's logical process grid runs on which cell of the
+allocated cuboid.  Every consumer historically assumed row-major rank
+order; Glantz et al. (grid/torus process mapping) and Ahrens (contiguous
+partitioning for bottleneck communication) show that congestion- and
+dilation-aware embeddings recover much of the bottleneck that remains
+after a good (or is forced by a bad) partition geometry.
+
+Objects and conventions
+-----------------------
+* A **mapping** is an (n, D) int array ``coords``: machine-torus
+  coordinates of each rank, rank index = row.  Ranks of a logical process
+  grid are raveled row-major (C order) over ``logical_dims``.
+* **Traffic** is rank-space: ``(src_rank, dst_rank, vol)`` arrays, volumes
+  in the same abstract bytes-per-phase units the routing engine uses
+  (:mod:`repro.network.routing`).  :func:`pattern_traffic` builds the
+  standard workloads from :mod:`repro.network.patterns` in rank space.
+* Two scores, both computed batched in NumPy (no per-hop Python):
+
+  - **congestion** — max per-physical-link load of the mapped traffic
+    routed on the *machine* torus by the DOR engine (links, not
+    bandwidth; double links halve under the BG/Q convention);
+  - **dilation** — total volume-weighted hop count
+    ``sum_m vol_m * hops(src_m, dst_m)`` (minimal toroidal distance —
+    exactly the hops DOR takes).
+
+  Candidates are ranked lexicographically: congestion first (the
+  completion-time bound), dilation second (total fabric energy/occupancy).
+
+Strategy catalogue (:func:`map_ranks` evaluates all and picks the best):
+
+* ``identity``          — row-major rank order over the oriented cuboid:
+  the implicit status quo of every consumer, kept as the baseline.
+* ``axis-permutation``  — all axis orders x orientations (reversals) of
+  the cuboid's enumeration, deduplicated over unit dims.  Recovers e.g.
+  a logical (8, 2) halo grid laid across a physical (2, 8) slice.
+* ``gray-snake``        — boustrophedon (reflected-Gray-code) cell order:
+  consecutive ranks are physically adjacent, the right order for ring
+  collectives on slices without wrap.
+* ``greedy``            — a congestion-refinement pass seeded from the
+  best of the above: steepest-descent rank swaps among the heaviest
+  communicators, loads delta-updated per swap.
+
+The per-hop oracle lives in ``tests/reference_mapping.py``; property tests
+pin the vectorized scorer to it, and ``benchmarks/bench_mapping.py``
+anchors the speedup claim (emits ``BENCH_mapping.json``).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .geometry import volume
+from .routing import max_link_load, route_dor
+
+Coord = Tuple[int, ...]
+RankTraffic = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+#: Patterns understood by :func:`pattern_traffic`, in rank space.
+MAPPING_PATTERNS = ("halo", "pairing", "ring", "all-to-all")
+
+
+# ---------------------------------------------------------------------------
+# Rank-space traffic.
+# ---------------------------------------------------------------------------
+def pattern_traffic(
+    logical_dims: Sequence[int], pattern: str = "halo", vol: float = 1.0
+) -> RankTraffic:
+    """Named workload on the logical process grid, in rank space.
+
+    ``(src_rank, dst_rank, vol)`` with ranks raveled row-major over
+    ``logical_dims``.  Patterns: ``"halo"`` (nearest-neighbour exchange on
+    the logical grid), ``"pairing"`` (the paper's antipodal benchmark),
+    ``"ring"`` (each rank exchanges with rank +-1 mod n — ring-collective
+    step traffic, defined on rank order, not logical coordinates), and
+    ``"all-to-all"`` (mapping-invariant by construction; useful as a
+    sanity control).  Volumes are uniform, ``vol`` per message.
+    """
+    logical_dims = tuple(int(a) for a in logical_dims)
+    n = volume(logical_dims)
+    if pattern == "ring":
+        if n <= 1:
+            empty = np.zeros(0, dtype=np.int64)
+            return empty, empty.copy(), np.zeros(0)
+        r = np.arange(n, dtype=np.int64)
+        src = np.concatenate([r, r])
+        dst = np.concatenate([(r + 1) % n, (r - 1) % n])
+        return src, dst, np.full(2 * n, float(vol))
+    from . import patterns
+
+    builders = {
+        "halo": patterns.nearest_neighbor_halo,
+        "pairing": patterns.bisection_pairing,
+        "all-to-all": patterns.all_to_all,
+    }
+    if pattern not in builders:
+        raise ValueError(
+            f"unknown mapping pattern {pattern!r}; expected one of {MAPPING_PATTERNS}"
+        )
+    s, d, v = builders[pattern](logical_dims, vol)
+    if s.shape[0] == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return empty, empty.copy(), np.zeros(0)
+    src = np.ravel_multi_index(tuple(s.T), logical_dims).astype(np.int64)
+    dst = np.ravel_multi_index(tuple(d.T), logical_dims).astype(np.int64)
+    return src, dst, np.asarray(v, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Scoring (the vectorized engine; oracle: tests/reference_mapping.py).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MappingScore:
+    """(congestion, dilation) of one mapping under one traffic pattern.
+
+    ``congestion`` — max per-physical-link load (the phase-time bound,
+    in traffic-volume units; BG/Q double links halve).  ``dilation`` —
+    total volume-weighted hop count over all messages.
+    """
+
+    congestion: float
+    dilation: float
+
+    def key(self) -> Tuple[float, float]:
+        """Lexicographic ranking key, rounded so float noise cannot flip
+        the congestion-first comparison (mirrors placement scoring)."""
+        return (round(self.congestion, 9), round(self.dilation, 9))
+
+
+def toroidal_hops(
+    dims: Sequence[int],
+    src: np.ndarray,
+    dst: np.ndarray,
+    wrap: Optional[Sequence[bool]] = None,
+) -> np.ndarray:
+    """Minimal hop count per message: wrap-aware Manhattan distance —
+    exactly the links a minimal DOR route traverses on the torus.
+
+    ``wrap`` marks which machine dimensions actually have their
+    wrap-around link (default: all, the torus the routing engine models);
+    an unwrapped dimension contributes the plain ``|src - dst|`` chain
+    distance, since the short way around does not physically exist."""
+    d = np.asarray(tuple(int(a) for a in dims), dtype=np.int64)
+    delta = np.abs(np.atleast_2d(src) - np.atleast_2d(dst))
+    around = np.minimum(delta, d - delta)
+    if wrap is not None:
+        w = np.asarray(tuple(bool(x) for x in wrap), dtype=bool)
+        around = np.where(w, around, delta)
+    return around.sum(axis=1)
+
+
+def mapping_loads(
+    dims: Sequence[int],
+    coords: np.ndarray,
+    traffic: RankTraffic,
+    split_ties: bool = True,
+) -> np.ndarray:
+    """(D, 2, *dims) link-load tensor of the mapped rank traffic on the
+    machine torus (the mapped analogue of
+    :func:`repro.network.placement.placement_loads`)."""
+    dims = tuple(int(a) for a in dims)
+    rsrc, rdst, vol = traffic
+    if rsrc.shape[0] == 0:
+        return np.zeros((len(dims), 2) + dims)
+    return route_dor(dims, coords[rsrc], coords[rdst], vol, split_ties=split_ties)
+
+
+def score_mapping(
+    dims: Sequence[int],
+    coords: np.ndarray,
+    traffic: RankTraffic,
+    split_ties: bool = True,
+    double_link_on_2: bool = True,
+) -> MappingScore:
+    """Score one mapping: route the rank traffic on the machine torus with
+    the vectorized DOR engine and reduce to (congestion, dilation).
+
+    ``coords`` is the (n, D) rank->cell array; ``traffic`` is rank-space
+    ``(src_rank, dst_rank, vol)``.  One ``route_dor`` call — O(M + N)
+    array work for M messages on an N-cell machine — plus an O(M)
+    closed-form dilation; the per-hop oracle in
+    ``tests/reference_mapping.py`` pins both numbers.
+    """
+    dims = tuple(int(a) for a in dims)
+    rsrc, rdst, vol = traffic
+    if rsrc.shape[0] == 0:
+        return MappingScore(0.0, 0.0)
+    src = coords[rsrc]
+    dst = coords[rdst]
+    loads = route_dor(dims, src, dst, vol, split_ties=split_ties)
+    congestion = max_link_load(dims, loads, double_link_on_2)
+    dilation = float((np.asarray(vol) * toroidal_hops(dims, src, dst)).sum())
+    return MappingScore(congestion, dilation)
+
+
+# ---------------------------------------------------------------------------
+# Cell enumerations (the structured strategies).
+# ---------------------------------------------------------------------------
+def placement_cell_coords(
+    dims: Sequence[int], oriented: Sequence[int], offset: Coord
+) -> np.ndarray:
+    """(n, D) machine coordinates of the placement's cells in row-major
+    (C) order over ``oriented`` — the identity mapping's coords."""
+    dims = tuple(int(a) for a in dims)
+    oriented = tuple(int(w) for w in oriented)
+    n = volume(oriented)
+    rel = np.stack(np.unravel_index(np.arange(n), oriented), axis=1).astype(np.int64)
+    off = np.asarray(offset, dtype=np.int64)
+    return (rel + off) % np.asarray(dims, dtype=np.int64)
+
+
+def identity_mapping(
+    dims: Sequence[int], oriented: Sequence[int], offset: Coord
+) -> np.ndarray:
+    """Row-major rank order over the oriented cuboid — the implicit status
+    quo of every consumer before this module, kept as the baseline."""
+    return placement_cell_coords(dims, oriented, offset)
+
+
+def axis_permutation_orders(
+    oriented: Sequence[int],
+) -> Iterator[Tuple[Tuple[int, ...], Tuple[bool, ...]]]:
+    """All distinct (axis order, per-axis reversal) enumerations of the
+    cuboid, deduplicated: unit dims neither reorder nor reverse, so a
+    (1, 4, 1) cuboid yields exactly 2 candidates, not 48."""
+    oriented = tuple(int(w) for w in oriented)
+    D = len(oriented)
+    seen = set()
+    for perm in itertools.permutations(range(D)):
+        for rev in itertools.product((False, True), repeat=D):
+            key = tuple((p, rev[p]) for p in perm if oriented[p] > 1)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield perm, rev
+
+
+def axis_order_coords(
+    dims: Sequence[int],
+    oriented: Sequence[int],
+    offset: Coord,
+    perm: Sequence[int],
+    reverse: Sequence[bool],
+) -> np.ndarray:
+    """Cells enumerated with axis ``perm[0]`` slowest / ``perm[-1]``
+    fastest, axis k reversed where ``reverse[k]``; rank r gets the r-th
+    cell.  ``perm = (0, 1, ..)`` with no reversal is the identity."""
+    dims = tuple(int(a) for a in dims)
+    oriented = tuple(int(w) for w in oriented)
+    n = volume(oriented)
+    shape = tuple(oriented[p] for p in perm)
+    in_perm = np.stack(np.unravel_index(np.arange(n), shape), axis=1).astype(np.int64)
+    rel = np.empty((n, len(dims)), dtype=np.int64)
+    for i, p in enumerate(perm):
+        c = in_perm[:, i]
+        if reverse[p]:
+            c = oriented[p] - 1 - c
+        rel[:, p] = c
+    off = np.asarray(offset, dtype=np.int64)
+    return (rel + off) % np.asarray(dims, dtype=np.int64)
+
+
+def snake_mapping(
+    dims: Sequence[int], oriented: Sequence[int], offset: Coord
+) -> np.ndarray:
+    """Boustrophedon (reflected-Gray-code) cell order: each axis reverses
+    direction whenever the parity of the preceding snaked coordinates is
+    odd, so consecutive ranks always occupy physically adjacent cells — a
+    Hamiltonian path through the cuboid, the right enumeration for ring
+    collectives on slices without wrap-around."""
+    dims = tuple(int(a) for a in dims)
+    oriented = tuple(int(w) for w in oriented)
+    n = volume(oriented)
+    rel = np.stack(np.unravel_index(np.arange(n), oriented), axis=1).astype(np.int64)
+    out = rel.copy()
+    parity = np.zeros(n, dtype=np.int64)
+    for k, w in enumerate(oriented):
+        flip = parity % 2 == 1
+        out[:, k] = np.where(flip, w - 1 - rel[:, k], rel[:, k])
+        parity = parity + out[:, k]
+    off = np.asarray(offset, dtype=np.int64)
+    return (out + off) % np.asarray(dims, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Greedy congestion refinement.
+# ---------------------------------------------------------------------------
+def greedy_refine(
+    dims: Sequence[int],
+    coords: np.ndarray,
+    traffic: RankTraffic,
+    split_ties: bool = True,
+    double_link_on_2: bool = True,
+    max_rounds: int = 3,
+    max_ranks: int = 12,
+) -> Tuple[np.ndarray, MappingScore, bool]:
+    """Steepest-descent rank-swap refinement of a seed mapping.
+
+    Per round: take the ``max_ranks`` ranks with the largest
+    volume-weighted incident hop count (the heaviest communicators), try
+    every unordered swap among them, and apply the single best swap that
+    lexicographically lowers (congestion, dilation).  Load tensors are
+    delta-updated — only the swapped ranks' incident messages are
+    re-routed — so one round is O(max_ranks^2 * (N + m_inc)), not a full
+    re-score per candidate.  Deterministic; returns
+    ``(coords, score, improved)``.
+    """
+    dims = tuple(int(a) for a in dims)
+    rsrc, rdst, vol = traffic
+    coords = np.array(coords, dtype=np.int64)
+    if rsrc.shape[0] == 0 or coords.shape[0] < 2:
+        return coords, score_mapping(
+            dims, coords, traffic, split_ties, double_link_on_2
+        ), False
+
+    vol = np.asarray(vol, dtype=np.float64)
+    loads = route_dor(dims, coords[rsrc], coords[rdst], vol, split_ties=split_ties)
+    hops = toroidal_hops(dims, coords[rsrc], coords[rdst])
+    score = MappingScore(
+        max_link_load(dims, loads, double_link_on_2),
+        float((vol * hops).sum()),
+    )
+
+    n = coords.shape[0]
+    improved_any = False
+    for _ in range(max_rounds):
+        # Heaviest communicators: volume-weighted incident hops per rank.
+        whops = vol * toroidal_hops(dims, coords[rsrc], coords[rdst])
+        per_rank = np.bincount(rsrc, weights=whops, minlength=n) + np.bincount(
+            rdst, weights=whops, minlength=n
+        )
+        cand = np.argsort(-per_rank, kind="stable")[: min(max_ranks, n)]
+        best_swap = None
+        for i, j in itertools.combinations(sorted(int(c) for c in cand), 2):
+            inc = (rsrc == i) | (rdst == i) | (rsrc == j) | (rdst == j)
+            if not inc.any():
+                continue
+            old = route_dor(
+                dims, coords[rsrc[inc]], coords[rdst[inc]], vol[inc],
+                split_ties=split_ties,
+            )
+            swapped = coords.copy()
+            swapped[[i, j]] = swapped[[j, i]]
+            new = route_dor(
+                dims, swapped[rsrc[inc]], swapped[rdst[inc]], vol[inc],
+                split_ties=split_ties,
+            )
+            trial_loads = np.maximum(loads - old + new, 0.0)
+            trial = MappingScore(
+                max_link_load(dims, trial_loads, double_link_on_2),
+                score.dilation
+                - float((vol[inc] * toroidal_hops(dims, coords[rsrc[inc]], coords[rdst[inc]])).sum())
+                + float((vol[inc] * toroidal_hops(dims, swapped[rsrc[inc]], swapped[rdst[inc]])).sum()),
+            )
+            if trial.key() < score.key() and (
+                best_swap is None or trial.key() < best_swap[0].key()
+            ):
+                best_swap = (trial, (i, j), trial_loads)
+        if best_swap is None:
+            break
+        score, (i, j), loads = best_swap
+        coords[[i, j]] = coords[[j, i]]
+        improved_any = True
+    # Re-score from scratch: the delta-updated tensor carries float noise.
+    final = score_mapping(dims, coords, traffic, split_ties, double_link_on_2)
+    return coords, final, improved_any
+
+
+# ---------------------------------------------------------------------------
+# The engine's front door.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RankMapping:
+    """A chosen rank->cell embedding and its predicted cost.
+
+    ``coords[r]`` is the machine-torus coordinate of rank r;
+    ``logical_dims`` is the logical process grid (ranks raveled row-major
+    over it); ``score`` is the winning strategy's (congestion, dilation)
+    and ``identity_score`` the row-major baseline's, so
+    ``identity_score.congestion - score.congestion`` is the contention
+    the mapping recovered without touching the allocation.
+    """
+
+    dims: Tuple[int, ...]
+    oriented: Tuple[int, ...]
+    offset: Coord
+    logical_dims: Tuple[int, ...]
+    pattern: str
+    strategy: str
+    coords: np.ndarray
+    score: MappingScore
+    identity_score: MappingScore
+    #: Wrap-around link present per machine dimension (None = fully
+    #: wrapped).  The congestion/dilation scores always model the
+    #: fully-wrapped torus (the routing engine's domain); these flags make
+    #: the *physical* measurements — :func:`mesh_axis_hops` and the
+    #: collective pricing built on it — honest about links that do not
+    #: exist on partially-wrapped fabrics.
+    wrap: Optional[Tuple[bool, ...]] = None
+    #: (D, 2, *dims) link-load tensor of the chosen mapping's traffic on
+    #: the machine torus (write-locked; what the congestion score reduces)
+    #: — consumers reuse it instead of re-routing the pattern.
+    loads: Optional[np.ndarray] = None
+
+    @property
+    def num_ranks(self) -> int:
+        """Number of ranks (== cells of the placement)."""
+        return int(self.coords.shape[0])
+
+    @property
+    def recovered_congestion(self) -> float:
+        """Max-link-load reduction vs the row-major baseline (>= 0)."""
+        return self.identity_score.congestion - self.score.congestion
+
+    def cell_of_rank(self, rank: int) -> Coord:
+        """Machine coordinate of one rank."""
+        return tuple(int(x) for x in self.coords[rank])
+
+
+def map_ranks(
+    dims: Sequence[int],
+    oriented: Sequence[int],
+    offset: Optional[Coord] = None,
+    logical_dims: Optional[Sequence[int]] = None,
+    pattern: str = "halo",
+    traffic: Optional[RankTraffic] = None,
+    split_ties: bool = True,
+    double_link_on_2: bool = True,
+    refine: bool = True,
+    wrap: Optional[Sequence[bool]] = None,
+) -> RankMapping:
+    """Choose the best rank->cell embedding for a placed cuboid.
+
+    Evaluates the full strategy catalogue — row-major ``identity``,
+    ``axis-permutation`` (all dim orders/orientations, unit dims
+    deduplicated), ``gray-snake``, and (with ``refine=True``) a ``greedy``
+    congestion-refinement pass seeded from the best of the others — and
+    returns the lexicographic (congestion, dilation) winner; ties keep
+    the earlier strategy, so identity wins unless something strictly
+    helps.
+
+    ``logical_dims`` is the job's logical process grid (default: the
+    oriented extents, i.e. a literal relabeling of the cuboid); its
+    volume must equal the placement's.  ``traffic`` overrides ``pattern``
+    with explicit rank-space ``(src_rank, dst_rank, vol)`` arrays.
+    ``wrap`` records which machine dimensions physically have their
+    wrap-around link (default: all) — it does not change the DOR-torus
+    congestion/dilation scores, but flows to :func:`mesh_axis_hops` so the
+    collective pricing never assumes a wrap link that is not there.
+
+    Example — a logical (8, 2) halo grid laid across a (2, 8) slice of a
+    (4, 8) torus: row-major rank order folds the logical 8-ring onto the
+    short physical axis, stacking its traffic on the row links; the
+    axis-permutation search restores the aligned embedding and halves the
+    max link load:
+
+    >>> m = map_ranks((4, 8), (2, 8), (0, 0), logical_dims=(8, 2), pattern="halo")
+    >>> m.identity_score.congestion, m.score.congestion
+    (4.0, 2.0)
+    >>> m.strategy
+    'axis-permutation'
+    """
+    dims = tuple(int(a) for a in dims)
+    oriented = tuple(int(w) for w in oriented)
+    if offset is None:
+        offset = (0,) * len(dims)
+    offset = tuple(int(o) for o in offset)
+    if len(oriented) != len(dims) or any(
+        w < 1 or w > a for w, a in zip(oriented, dims)
+    ):
+        raise ValueError(f"orientation {oriented} does not fit machine {dims}")
+    logical = (
+        tuple(int(a) for a in logical_dims) if logical_dims is not None else oriented
+    )
+    if volume(logical) != volume(oriented):
+        raise ValueError(
+            f"logical grid {logical} has {volume(logical)} ranks; placement "
+            f"{oriented} has {volume(oriented)} cells"
+        )
+    if traffic is None:
+        traffic = pattern_traffic(logical, pattern)
+    else:
+        pattern = "explicit"
+
+    def _score(coords: np.ndarray) -> MappingScore:
+        return score_mapping(dims, coords, traffic, split_ties, double_link_on_2)
+
+    ident = identity_mapping(dims, oriented, offset)
+    identity_score = _score(ident)
+
+    candidates: List[Tuple[str, np.ndarray, MappingScore]] = [
+        ("identity", ident, identity_score)
+    ]
+    for perm, rev in axis_permutation_orders(oriented):
+        if all(p == i for i, p in enumerate(perm)) and not any(rev):
+            continue  # the identity enumeration, already scored
+        coords = axis_order_coords(dims, oriented, offset, perm, rev)
+        candidates.append(("axis-permutation", coords, _score(coords)))
+    snake = snake_mapping(dims, oriented, offset)
+    candidates.append(("gray-snake", snake, _score(snake)))
+
+    best = min(candidates, key=lambda t: t[2].key())
+    strategy, coords, score = best
+    if refine:
+        refined, rscore, improved = greedy_refine(
+            dims, coords, traffic, split_ties, double_link_on_2
+        )
+        if improved and rscore.key() < score.key():
+            strategy, coords, score = f"greedy({strategy})", refined, rscore
+    coords = np.ascontiguousarray(coords)
+    coords.setflags(write=False)
+    loads = mapping_loads(dims, coords, traffic, split_ties)
+    loads.setflags(write=False)
+    return RankMapping(
+        dims=dims,
+        oriented=oriented,
+        offset=offset,
+        logical_dims=logical,
+        pattern=pattern,
+        strategy=strategy,
+        coords=coords,
+        score=score,
+        identity_score=identity_score,
+        wrap=tuple(bool(x) for x in wrap) if wrap is not None else None,
+        loads=loads,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis measurement (the collectives/launch bridge).
+# ---------------------------------------------------------------------------
+def mesh_axis_hops(
+    dims: Sequence[int],
+    coords: np.ndarray,
+    mesh_shape: Sequence[int],
+    axis: int,
+    wrap: Optional[Sequence[bool]] = None,
+) -> Tuple[int, int]:
+    """Measured neighbour distances of one logical mesh axis under a
+    mapping: ``(interior, wrap)`` — the max hop count between
+    consecutive-rank pairs along the axis, and between its last and first
+    rank (the ring-closing step).  Ranks are raveled row-major over
+    ``mesh_shape``; a size-1 axis measures ``(0, 0)``.  ``wrap`` marks
+    which machine dimensions physically have their wrap-around link
+    (default: all); distances never use a missing wrap link.
+
+    This is what :func:`repro.network.collectives.assign_axes` uses to
+    replace the assumed stride-1/wrapped embedding with the mapping's
+    actual geometry.
+    """
+    dims = tuple(int(a) for a in dims)
+    shape = tuple(int(s) for s in mesh_shape)
+    n = int(np.prod(shape))
+    if coords.shape[0] != n:
+        raise ValueError(f"mapping has {coords.shape[0]} ranks; mesh {shape} needs {n}")
+    size = shape[axis]
+    if size <= 1:
+        return 0, 0
+    stride = int(np.prod(shape[axis + 1:])) if axis + 1 < len(shape) else 1
+    idx = np.arange(n)
+    coord_k = (idx // stride) % size
+    interior = idx[coord_k < size - 1]
+    wrap_src = idx[coord_k == size - 1]
+    interior_max = int(
+        toroidal_hops(dims, coords[interior], coords[interior + stride], wrap).max()
+    )
+    wrap_max = int(
+        toroidal_hops(
+            dims, coords[wrap_src], coords[wrap_src - (size - 1) * stride], wrap
+        ).max()
+    )
+    return interior_max, wrap_max

@@ -1,0 +1,29 @@
+"""Tier-1 enforcement of the docs gate (`tools/check_docs.py`): doctests
+over the audited ``repro.network`` modules, docstring coverage of every
+exported symbol, README/DESIGN python code blocks executing, and the
+README quickstart commands matching `.github/workflows/ci.yml` verbatim.
+
+The CI ``docs`` job runs the same script standalone; running it under
+pytest too means a drifted docstring or README block fails the tier-1
+suite locally, before CI."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_docs_gate_passes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=300,
+    )
+    assert proc.returncode == 0, f"docs gate failed:\n{proc.stderr}\n{proc.stdout}"
+    assert "all OK" in proc.stdout

@@ -118,3 +118,29 @@ def test_partition_analysis_example_end_to_end():
     assert comm["contention-scored"] <= comm["isoperimetric"] + 1e-9
     # JUQUEEN shared-fabric replay present with all three policies
     assert "JUQUEEN shared-fabric replay" in out
+    # Mapping-vs-geometry study: golden rows (the (4, 4) slice is already
+    # optimal under row-major; no mapping fixes the (16, 1) line; the
+    # transposed landing is recovered entirely by the axis-permutation
+    # search) and the per-job mapping replay never worsens row-major.
+    assert "Rank mapping vs partition geometry" in out
+    assert (
+        "best (4, 4) <- logical (4, 4): row-major congestion 2.0 -> mapped 2.0"
+        in out
+    )
+    assert (
+        "worst (16, 1) <- logical (4, 4): row-major congestion 6.0 -> mapped 6.0"
+        in out
+    )
+    assert (
+        "transposed (2, 8) <- logical (8, 2): row-major congestion 6.0 -> "
+        "mapped 2.0 (axis-permutation)" in out
+    )
+    mapped_replay = re.findall(
+        r"(Mira|JUQUEEN): scheduled\s+(\d+)\s+row-major congestion\s+([\d.]+)"
+        r" -> mapped\s+([\d.]+)",
+        out,
+    )
+    assert {name for name, *_ in mapped_replay} == {"Mira", "JUQUEEN"}
+    for _, scheduled, identity_c, mapped_c in mapped_replay:
+        assert int(scheduled) > 0
+        assert float(mapped_c) <= float(identity_c) + 1e-9

@@ -186,6 +186,8 @@ def test_commit_validates_orientation_and_volume():
         m.commit(0, (6, 1), (6, 1), (0, 0))  # 6 > 4: cells would alias
     with pytest.raises(ValueError):
         m.commit(0, (2, 2), (2, 1), (0, 0))  # volume mismatch
+    with pytest.raises(ValueError):
+        m.commit(0, (4, 1), (2, 2), (0, 0))  # same volume, different multiset
     p = m.commit(0, (2, 2), (2, 2), (1, 1))
     assert p is not None and m.free_units == 12
     with pytest.raises(ValueError):

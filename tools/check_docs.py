@@ -1,0 +1,140 @@
+"""Docs gate: doctests, docstring coverage, and README/DESIGN code blocks.
+
+Four checks, all fatal:
+
+1. **Doctests** — runs ``doctest.testmod`` over the audited
+   ``repro.network`` modules (``python -m doctest`` cannot import package
+   modules with relative imports, so the equivalent is driven here) and
+   requires a minimum number of attempted examples, so deleting the
+   ``TorusFabric`` / ``simulate_queue`` / ``map_ranks`` examples fails the
+   gate rather than passing vacuously.
+2. **Docstring coverage** — every exported (callable or class) symbol of
+   ``repro.network`` carries a docstring (typing aliases exempt).
+3. **Code blocks** — every ```` ```python ```` fenced block in README.md
+   and DESIGN.md is executed in an isolated namespace (blocks must be
+   self-contained, imports included).
+4. **Quickstart == CI** — every command line in README's quickstart bash
+   block (lines starting with ``pip install`` or ``PYTHONPATH=``) appears
+   verbatim in ``.github/workflows/ci.yml``, so the README cannot drift
+   from what CI actually runs.
+
+Run: ``PYTHONPATH=src python tools/check_docs.py`` (CI `docs` job;
+``tests/test_docs.py`` runs the same gate under tier-1).
+"""
+
+from __future__ import annotations
+
+import doctest
+import importlib
+import inspect
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+AUDITED_MODULES = [
+    "repro.network.geometry",
+    "repro.network.fabric",
+    "repro.network.routing",
+    "repro.network.patterns",
+    "repro.network.collectives",
+    "repro.network.placement",
+    "repro.network.allocation",
+    "repro.network.mapping",
+]
+# TorusFabric + simulate_queue + map_ranks examples at minimum.
+MIN_DOCTEST_EXAMPLES = 8
+
+FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+
+
+def check_doctests() -> list:
+    errors = []
+    attempted = 0
+    for name in AUDITED_MODULES:
+        mod = importlib.import_module(name)
+        result = doctest.testmod(mod, verbose=False)
+        attempted += result.attempted
+        if result.failed:
+            errors.append(f"doctest failures in {name}: {result.failed}")
+    if attempted < MIN_DOCTEST_EXAMPLES:
+        errors.append(
+            f"only {attempted} doctest examples across audited modules "
+            f"(expected >= {MIN_DOCTEST_EXAMPLES}; were examples deleted?)"
+        )
+    return errors
+
+
+def check_docstring_coverage() -> list:
+    net = importlib.import_module("repro.network")
+    missing = []
+    for name, obj in vars(net).items():
+        if name.startswith("_") or inspect.ismodule(obj):
+            continue
+        if not (callable(obj) or inspect.isclass(obj)):
+            continue  # constants
+        if getattr(obj, "__module__", "").startswith("typing"):
+            continue  # typing aliases (e.g. Geometry) cannot carry docstrings
+        if not (getattr(obj, "__doc__", None) or "").strip():
+            missing.append(name)
+    if missing:
+        return [f"exported repro.network symbols lack docstrings: {missing}"]
+    return []
+
+
+def check_code_blocks() -> list:
+    errors = []
+    for doc in ("README.md", "DESIGN.md"):
+        text = (REPO / doc).read_text()
+        for i, (lang, body) in enumerate(FENCE.findall(text)):
+            if lang != "python":
+                continue
+            ns: dict = {}
+            try:
+                exec(compile(body, f"<{doc} block {i}>", "exec"), ns)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                errors.append(f"{doc} python block {i} failed: {e!r}")
+    return errors
+
+
+def check_quickstart_matches_ci() -> list:
+    readme = (REPO / "README.md").read_text()
+    ci = "\n".join(
+        line
+        for line in (REPO / ".github" / "workflows" / "ci.yml").read_text().splitlines()
+        if not line.strip().startswith("#")  # a command only in a comment is drift
+    )
+    commands = []
+    for lang, body in FENCE.findall(readme):
+        if lang not in ("bash", "sh", "console"):
+            continue
+        for line in body.splitlines():
+            line = line.strip()
+            if line.startswith("pip install") or line.startswith("PYTHONPATH="):
+                commands.append(line)
+    if not commands:
+        return ["README.md has no quickstart bash commands to verify"]
+    return [
+        f"README quickstart command not found in ci.yml: {cmd!r}"
+        for cmd in commands
+        if cmd not in ci
+    ]
+
+
+def main() -> int:
+    errors = (
+        check_doctests()
+        + check_docstring_coverage()
+        + check_code_blocks()
+        + check_quickstart_matches_ci()
+    )
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print("docs gate: doctests, docstring coverage, code blocks, quickstart==CI all OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
