@@ -20,6 +20,7 @@ from benchmarks.paper_tables import (
 )
 from benchmarks.bench_allocation import allocation_microbench
 from benchmarks.bench_mapping import mapping_microbench
+from benchmarks.bench_netsim import netsim_microbench
 from benchmarks.bench_routing import routing_microbench
 from benchmarks.matmul_scaling import fig5_matmul, fig6_strong_scaling
 from benchmarks.roofline_report import dryrun_matrix, roofline_table
@@ -36,6 +37,7 @@ BENCHMARKS = [
     ("routing_microbench", routing_microbench),
     ("allocation_microbench", allocation_microbench),
     ("mapping_microbench", mapping_microbench),
+    ("netsim_microbench", netsim_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]

@@ -30,9 +30,15 @@ from repro.network import (
     IsoperimetricPolicy,
     JobRequest,
     ListPolicy,
+    bisection_pairing,
+    compare_routing,
+    hotspot_line,
     map_ranks,
     simulate_queue,
+    simulate_traffic,
 )
+from repro.network.placement import placement_all_to_all_traffic
+from repro.network.routing import predict_pairing_time
 
 print("== Mira partitions (paper Table 6): current vs isoperimetric-optimal ==")
 for r in mira_partition_table():
@@ -92,6 +98,116 @@ def mapping_recovery_study(pattern: str = "halo"):
             }
         )
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Predicted vs simulated contention (the paper's §7 validation leg): route
+# the pairing benchmark through the flow-level simulator and compare the
+# measured slowdown against the static max-link-load prediction — for
+# steady patterns they coincide, so the x2 geometry gap is *derived* from
+# dynamics, not asserted.
+# ---------------------------------------------------------------------------
+def netsim_validation_table():
+    """Pairing-benchmark slowdowns, predicted and simulated, for 512-node
+    (one-midplane's-worth) cuboid tori on Mira's node fabric plus the
+    scheduler-vs-proposed partition pairs of both machines at node level."""
+    rows = []
+    for label, node_dims in [
+        ("512-node best (8,8,8)", (8, 8, 8)),
+        ("512-node mid (16,8,4)", (16, 8, 4)),
+        ("512-node worst (16,16,2)", (16, 16, 2)),
+    ]:
+        predicted = predict_pairing_time(node_dims, 1.0, 1.0).max_link_load
+        sim = simulate_traffic(node_dims, bisection_pairing(node_dims))
+        rows.append(
+            {
+                "which": label,
+                "node_dims": node_dims,
+                "predicted": predicted,
+                "simulated": sim.slowdown,
+                "steps": sim.steps,
+            }
+        )
+    pairs = []
+    for machine, midplanes in [(MIRA, 4), (JUQUEEN, 8)]:
+        worst = machine.worst_partition(midplanes)[0]
+        best = machine.best_partition(midplanes)[0]
+        ratio = {}
+        for which, geom in [("worst", worst), ("best", best)]:
+            node_dims = nd(geom)
+            sim = simulate_traffic(node_dims, bisection_pairing(node_dims))
+            ratio[which] = {
+                "geometry": geom,
+                "node_dims": node_dims,
+                "predicted": predict_pairing_time(node_dims, 1.0, 1.0).max_link_load,
+                "simulated": sim.slowdown,
+            }
+        pairs.append({"machine": machine.name, "midplanes": midplanes, **ratio})
+    return rows, pairs
+
+
+def routing_recovery_study():
+    """DOR vs minimal-adaptive on two kinds of contention: the pairing
+    benchmark's geometry-induced load (uniform — routing recovers nothing,
+    the paper's case for fixing partition shape) and a skewed hotspot line
+    (routing recovers half)."""
+    pairing = compare_routing((16, 16, 2), bisection_pairing((16, 16, 2)))
+    hotspot = compare_routing((8, 8), hotspot_line((8, 8)))
+    return pairing, hotspot
+
+
+def simulated_contention_replay(n_jobs: int):
+    """Mira + JUQUEEN queue replays under contention="simulated": every
+    placed job's traffic drains through the flow simulator against the
+    placements live at its start, and the per-job completion is compared
+    with the static max-load bound.  On cuboid-allocated BG/Q tori the
+    simulated slowdown is ~1.0 on every job — the paper's partition-
+    isolation property, confirmed dynamically — while a forced span-5
+    spill sharing JUQUEEN's 7-ring corridor shows the simulator charging
+    real completion time when isolation is violated."""
+    rows = []
+    cases = [
+        ("Mira", MIRA.midplane_dims, [2, 4, 6, 8, 12, 16, 24]),
+        ("JUQUEEN", JUQUEEN.midplane_dims, [2, 4, 6, 8, 12, 16, 20]),
+    ]
+    for name, dims, sizes in cases:
+        rng = np.random.default_rng(0)
+        sizes = np.array(sizes)
+        size = rng.choice(sizes, size=n_jobs)
+        arrival = np.cumsum(rng.exponential(0.3, size=n_jobs))
+        duration = rng.lognormal(mean=0.0, sigma=0.5, size=n_jobs) + 0.3
+        jobs = [
+            JobRequest(i, int(size[i]), True, float(duration[i]), float(arrival[i]))
+            for i in range(n_jobs)
+        ]
+        res = simulate_queue(
+            dims, jobs, IsoperimetricPolicy(), MIDPLANE_DIMS,
+            backfill=True, contention="simulated",
+        )
+        slowdowns = [j.simulated_slowdown for j in res.jobs]
+        rows.append(
+            {
+                "machine": name,
+                "scheduled": len(res.jobs),
+                "all_bounded": all(
+                    j.simulated_comm_time + 1e-9 >= j.comm_lower_bound
+                    for j in res.jobs
+                ),
+                "mean_slowdown": float(np.mean(slowdowns)) if slowdowns else 1.0,
+                "max_slowdown": float(np.max(slowdowns)) if slowdowns else 1.0,
+            }
+        )
+    # The violation demo: a span-5 job spills over the 7-ring; a 2-wide
+    # job lives in the corridor it routes through.
+    demo_dims = (7, 2, 2)
+    big = placement_all_to_all_traffic(demo_dims, (5, 2, 2), (0, 0, 0))
+    small = placement_all_to_all_traffic(demo_dims, (2, 2, 2), (5, 0, 0))
+    joint = tuple(np.concatenate(parts) for parts in zip(big, small))
+    res = simulate_traffic(demo_dims, joint)
+    t_small = float(res.completion[big[2].shape[0]:].max())
+    solo_small = simulate_traffic(demo_dims, small).makespan
+    demo = {"dims": demo_dims, "slowdown": t_small / solo_small}
+    return rows, demo
 
 
 # ---------------------------------------------------------------------------
@@ -281,3 +397,53 @@ if __name__ == "__main__":
             f"row-major congestion {r['identity_congestion']:.2f} -> mapped "
             f"{r['mapped_congestion']:.2f}  (remapped {r['remapped_jobs']} jobs)"
         )
+
+    print("\n== Predicted vs simulated contention (flow-level netsim, pairing benchmark) ==")
+    rows, pairs = netsim_validation_table()
+    for r in rows:
+        print(
+            f"  {r['which']:>26}: predicted x{r['predicted']:.1f}  "
+            f"simulated x{r['simulated']:.2f}  ({r['steps']} sim steps)"
+        )
+    best, _, worst = rows
+    print(
+        f"  -> 512-node worst/best simulated ratio: "
+        f"x{worst['simulated'] / best['simulated']:.2f} "
+        f"(the paper's ~2x avoidable-contention gap, derived dynamically)"
+    )
+    for p in pairs:
+        print(
+            f"  {p['machine']:>8} {p['midplanes']}-midplane "
+            f"worst {p['worst']['geometry']} vs best {p['best']['geometry']}: "
+            f"predicted x{p['worst']['predicted'] / p['best']['predicted']:.2f}, "
+            f"simulated x{p['worst']['simulated'] / p['best']['simulated']:.2f}"
+        )
+
+    print("\n== What routing alone recovers (DOR vs minimal-adaptive) ==")
+    pairing_cmp, hotspot_cmp = routing_recovery_study()
+    print(
+        f"  pairing on (16, 16, 2): makespan {pairing_cmp.dor_makespan:.1f} -> "
+        f"{pairing_cmp.adaptive_makespan:.1f}, recovered "
+        f"{100 * pairing_cmp.recovered_fraction:.0f}% "
+        f"(geometry-induced contention: routing cannot help — fix the partition)"
+    )
+    print(
+        f"  hotspot line on (8, 8): makespan {hotspot_cmp.dor_makespan:.1f} -> "
+        f"{hotspot_cmp.adaptive_makespan:.1f}, recovered "
+        f"{100 * hotspot_cmp.recovered_fraction:.0f}% "
+        f"(skew-induced contention: routing helps)"
+    )
+
+    print(f"\n== Queue replay with simulated contention ({n_jobs // 2} jobs) ==")
+    sim_rows, demo = simulated_contention_replay(n_jobs // 2)
+    for r in sim_rows:
+        print(
+            f"  {r['machine']:>8}: scheduled {r['scheduled']:4d}  "
+            f"all jobs >= static bound: {r['all_bounded']}  "
+            f"mean slowdown x{r['mean_slowdown']:.3f}  max x{r['max_slowdown']:.3f}"
+        )
+    print(
+        f"  -> cuboid allocation keeps simulated slowdowns at ~1.0 (partition "
+        f"isolation, now derived); forcing a span-5 spill beside a corridor job "
+        f"on {demo['dims']} slows the small job x{demo['slowdown']:.2f}"
+    )

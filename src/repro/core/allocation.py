@@ -6,7 +6,18 @@ code should import from ``repro.network`` directly.  See DESIGN.md.
 
 from __future__ import annotations
 
-from repro.network.allocation import (  # noqa: F401
+import warnings
+
+# One-shot by module caching: Python executes this module (and hence the
+# warning) once per process, however many times it is imported.
+warnings.warn(
+    "repro.core.allocation is a deprecated re-export shim; import from "
+    "repro.network instead (see DESIGN.md)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.network.allocation import (  # noqa: F401,E402
     AllocationPolicy,
     ContentionScoredPolicy,
     ElongatedPolicy,

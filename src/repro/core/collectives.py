@@ -9,7 +9,18 @@ directly.  See DESIGN.md.
 
 from __future__ import annotations
 
-from repro.network.fabric import (  # noqa: F401
+import warnings
+
+# One-shot by module caching: Python executes this module (and hence the
+# warning) once per process, however many times it is imported.
+warnings.warn(
+    "repro.core.collectives is a deprecated re-export shim; import from "
+    "repro.network instead (see DESIGN.md)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.network.fabric import (  # noqa: F401,E402
     DEFAULT_LINK_BW,
     POD_DCI_BW,
     TorusFabric,

@@ -9,7 +9,18 @@ See DESIGN.md for the deprecation path.
 
 from __future__ import annotations
 
-from repro.network.geometry import (  # noqa: F401
+import warnings
+
+# One-shot by module caching: Python executes this module (and hence the
+# warning) once per process, however many times it is imported.
+warnings.warn(
+    "repro.core.torus is a deprecated re-export shim; import from "
+    "repro.network instead (see DESIGN.md)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.network.geometry import (  # noqa: F401,E402
     ExplicitTorus,
     Geometry,
     all_divisor_geometries,

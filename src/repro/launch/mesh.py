@@ -38,6 +38,7 @@ from repro.network import (
     best_placement,
     best_slice_geometry,
     map_ranks,
+    simulate_traffic,
     slice_fabric,
     worst_slice_geometry,
 )
@@ -75,6 +76,10 @@ class MeshPlan:
     cost_model: CollectiveCostModel
     placement: Optional[Placement] = None  # set by occupancy-aware planning
     mapping: Optional[RankMapping] = None  # rank->chip embedding (with placement)
+    #: Flow-simulated contention multiplier of the mapping's traffic on the
+    #: pod (makespan over the zero-contention bound; None unless
+    #: ``plan_slice(..., simulate=True)`` ran on an occupancy-aware plan).
+    simulated_slowdown: Optional[float] = None
 
     @property
     def avoidable_contention(self) -> float:
@@ -102,6 +107,7 @@ def plan_slice(
     pod: Optional[TorusFabric] = None,
     state: Optional[MachineState] = None,
     job_id: Optional[int] = None,
+    simulate: bool = False,
 ) -> MeshPlan:
     """Choose slice geometry + axis layout for a C-chip job on one pod.
 
@@ -125,6 +131,13 @@ def plan_slice(
     mapping's *measured* stride/wrap instead of assuming a contiguous
     wrapped ring.  Geometry-only plans keep ``mapping=None`` and the
     assumed embedding (the empty-pod answer is unchanged).
+
+    ``simulate=True`` additionally drains the chosen mapping's traffic
+    through the flow-level simulator (:mod:`repro.network.netsim`) and
+    records the measured contention multiplier on
+    ``MeshPlan.simulated_slowdown`` — the dynamic counterpart of
+    ``mapping_congestion``, only available for occupancy-aware plans
+    (geometry-only plans have no concrete cells to simulate on).
     """
     pod = pod or pod_fabric()
     placement: Optional[Placement] = None
@@ -185,6 +198,15 @@ def plan_slice(
     assignment = assign_axes(
         fabric, axes, order_hint=["model", "data"], mapping=mapping
     )
+    simulated_slowdown = None
+    if simulate and mapping is not None:
+        sim = simulate_traffic(
+            pod.dims,
+            mapping.machine_traffic(),
+            link_bw=pod.link_bw,
+            double_link_on_2=pod.double_link_on_2,
+        )
+        simulated_slowdown = sim.slowdown
     return MeshPlan(
         slice_geometry=geom,
         slice_bisection_links=bis,
@@ -194,6 +216,7 @@ def plan_slice(
         cost_model=CollectiveCostModel(fabric, assignment),
         placement=placement,
         mapping=mapping,
+        simulated_slowdown=simulated_slowdown,
     )
 
 

@@ -12,6 +12,9 @@ Single home of every geometry / fabric / routing primitive in the repo
                 translation-invariant fast paths, pairing predictions.
   patterns    — traffic-pattern library (bisection pairing, all-to-all,
                 halo exchange, ring collectives, permutations, transpose).
+  netsim      — vectorized flow-level simulator: max-min fair link
+                sharing over DOR or minimal-adaptive paths, phased
+                collective schedules, prediction validation.
   collectives — jax.lax collective cost model + mesh-axis assignment.
   placement   — vectorized cuboid-placement engine: all free translates via
                 circular windowed sums, contention/contact scoring.
@@ -66,14 +69,33 @@ from .patterns import (
     all_to_all,
     bisection_pairing,
     furthest_offset,
+    hotspot_line,
     nearest_neighbor_halo,
     pairing_pairs,
     random_permutation,
     ring_all_gather,
+    ring_all_reduce_phases,
     ring_shift,
     transpose,
     uniform_shift,
     vertices,
+)
+from .netsim import (
+    FlowPaths,
+    FlowSimResult,
+    PhasedSimResult,
+    PredictionValidation,
+    RoutingComparison,
+    UtilizationSample,
+    adaptive_paths,
+    build_paths,
+    compare_routing,
+    dor_paths,
+    link_capacities,
+    simulate_flows,
+    simulate_phases,
+    simulate_traffic,
+    validate_prediction,
 )
 from .collectives import (
     AxisAssignment,
@@ -86,6 +108,7 @@ from .collectives import (
     ring_all_reduce_time,
     ring_all_to_all_time,
     ring_reduce_scatter_time,
+    simulated_ring_all_reduce_time,
 )
 from .placement import (
     ScoredPlacement,
@@ -108,6 +131,7 @@ from .mapping import (
     identity_mapping,
     map_ranks,
     mapping_loads,
+    mapping_traffic,
     mesh_axis_hops,
     pattern_traffic,
     placement_cell_coords,

@@ -53,15 +53,17 @@ import numpy as np
 
 from .geometry import Geometry, bisection_links, canonical, sub_cuboids
 from .mapping import RankMapping, map_ranks
+from .netsim import dor_paths, simulate_flows
 from .placement import (
     ScoredPlacement,
     best_placement,
     first_fit,
     pad_geometry,
+    placement_all_to_all_traffic,
     placement_cells,
     placement_loads,
 )
-from .routing import predict_pairing_time
+from .routing import max_link_load, predict_pairing_time
 
 Coord = Tuple[int, ...]
 
@@ -339,6 +341,21 @@ class ScheduledJob:
     end: float
     predicted_comm_time: float  # pairing-benchmark proxy, seconds/byte
     mapping: Optional[RankMapping] = None  # set when the simulator maps ranks
+    #: Static max-load proxy on the job's own traffic alone — the lower
+    #: bound no dynamic schedule can beat (contention="simulated" only).
+    comm_lower_bound: float = 0.0
+    #: Flow-simulated completion of the job's traffic against the
+    #: placements live at start time (contention="simulated" only).
+    simulated_comm_time: Optional[float] = None
+
+    @property
+    def simulated_slowdown(self) -> float:
+        """Simulated completion over the static max-load lower bound
+        (>= 1.0 by conservation; 1.0 when the job was not simulated or
+        moves no traffic)."""
+        if self.simulated_comm_time is None or self.comm_lower_bound <= 0.0:
+            return 1.0
+        return self.simulated_comm_time / self.comm_lower_bound
 
 
 @dataclass
@@ -373,6 +390,17 @@ class SimulationResult:
         if not self.jobs:
             return 0.0
         return float(np.mean([j.placement.predicted_contention for j in self.jobs]))
+
+    @property
+    def mean_simulated_slowdown(self) -> float:
+        """Mean flow-simulated slowdown over the static max-load bound
+        (jobs scheduled under ``contention="simulated"``; 1.0 otherwise)."""
+        simulated = [
+            j.simulated_slowdown for j in self.jobs if j.simulated_comm_time is not None
+        ]
+        if not simulated:
+            return 1.0
+        return float(np.mean(simulated))
 
 
 _EPS = 1e-12
@@ -410,6 +438,7 @@ def simulate_queue(
     *,
     backfill: bool = False,
     measure_contention: bool = False,
+    contention: Optional[str] = None,
     mapping_pattern: Optional[str] = None,
     double_link_on_2: bool = True,
 ) -> SimulationResult:
@@ -433,6 +462,19 @@ def simulate_queue(
     (``placement.predicted_contention``), so first-fit and scored policies
     report a comparable interference number.
 
+    ``contention`` names the contention model explicitly: ``None`` (no
+    measurement), ``"static"`` (identical to ``measure_contention=True``
+    — the max-load proxy), or ``"simulated"`` — everything static does,
+    plus a flow-level simulation (:mod:`repro.network.netsim`) of the
+    job's traffic against the placements live at its start: the job's
+    messages and every live job's messages drain together under max-min
+    fair link sharing, and the job records its simulated completion
+    (``ScheduledJob.simulated_comm_time``, seconds at ``link_bw``) next
+    to the static lower bound ``ScheduledJob.comm_lower_bound`` (its own
+    max link load alone — by conservation the simulation can never beat
+    it, so ``simulated_slowdown >= 1`` on every job; the contention the
+    static proxy only scores is here *derived* as extra completion time).
+
     ``mapping_pattern`` (requires ``measure_contention=True``) applies a
     per-job rank mapping when computing that measured number: each placed
     job's traffic is the named pattern (:data:`repro.network.mapping.
@@ -454,8 +496,17 @@ def simulate_queue(
     >>> [(j.placement.geometry, j.start) for j in res.jobs]
     [((2, 2, 1), 0.0), ((2, 2, 1), 0.0)]
     """
-    if mapping_pattern is not None and not measure_contention:
-        raise ValueError("mapping_pattern requires measure_contention=True")
+    if contention is None:
+        contention = "static" if measure_contention else None
+    elif contention not in ("static", "simulated"):
+        raise ValueError(
+            f"contention must be None, 'static' or 'simulated'; got {contention!r}"
+        )
+    measure = contention is not None
+    if mapping_pattern is not None and not measure:
+        raise ValueError(
+            "mapping_pattern requires measure_contention=True (or contention=)"
+        )
     machine = MachineState(machine_dims)
     result = SimulationResult(policy=policy.name)
     order = sorted(enumerate(jobs), key=lambda t: (t[1].arrival, t[0]))
@@ -477,6 +528,10 @@ def simulate_queue(
         if mapping_pattern is not None
         else None
     )
+    # Live jobs' message-level traffic (contention="simulated" only): the
+    # flow simulation at a job's start drains its messages together with
+    # every live job's.
+    live_traffic: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
 
     def try_start(req: JobRequest) -> bool:
         nonlocal seq, mapped_total
@@ -484,7 +539,9 @@ def simulate_queue(
         if placed is None:
             return False
         mapping: Optional[RankMapping] = None
-        if measure_contention:
+        comm_lower_bound = 0.0
+        simulated_comm_time: Optional[float] = None
+        if measure:
             if mapping_pattern is not None:
                 mapping = map_ranks(
                     machine.dims, placed.oriented, placed.offset,
@@ -503,6 +560,34 @@ def simulate_queue(
                 placed,
                 predicted_contention=float(job_loads[background > _EPS].sum()),
             )
+            if contention == "simulated":
+                if mapping is not None:
+                    job_traffic = mapping.machine_traffic()
+                else:
+                    job_traffic = placement_all_to_all_traffic(
+                        machine.dims, placed.oriented, placed.offset
+                    )
+                comm_lower_bound = (
+                    max_link_load(machine.dims, job_loads, double_link_on_2)
+                    / link_bw
+                )
+                background_traffic = list(live_traffic.values())
+                n_bg = sum(t[2].shape[0] for t in background_traffic)
+                if job_traffic[2].shape[0]:
+                    triples = background_traffic + [job_traffic]
+                    paths = dor_paths(
+                        machine.dims,
+                        np.concatenate([t[0] for t in triples]),
+                        np.concatenate([t[1] for t in triples]),
+                        np.concatenate([t[2] for t in triples]),
+                    )
+                    sim = simulate_flows(
+                        paths, link_bw=link_bw, double_link_on_2=double_link_on_2
+                    )
+                    simulated_comm_time = float(sim.completion[n_bg:].max())
+                else:
+                    simulated_comm_time = 0.0
+                live_traffic[placed.job_id] = job_traffic
         node_dims = _node_dims(placed.geometry, unit_node_dims)
         pred = predict_pairing_time(node_dims, 1.0, link_bw)
         job = ScheduledJob(
@@ -512,6 +597,8 @@ def simulate_queue(
             end=now + req.duration,
             predicted_comm_time=pred.time_per_volume,
             mapping=mapping,
+            comm_lower_bound=comm_lower_bound,
+            simulated_comm_time=simulated_comm_time,
         )
         result.jobs.append(job)
         heapq.heappush(running, (job.end, seq, job))
@@ -567,6 +654,7 @@ def simulate_queue(
             released = live_mapped.pop(done.request.job_id, None)
             if released is not None:
                 mapped_total -= released
+            live_traffic.pop(done.request.job_id, None)
             blocked = None  # freed cells: the head is worth retrying
     return result
 

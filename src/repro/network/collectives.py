@@ -151,6 +151,32 @@ COLLECTIVE_TIME = {
 }
 
 
+def simulated_ring_all_reduce_time(
+    dims: Sequence[int],
+    axis: int,
+    bytes_in: float,
+    link_bw: float = 1.0,
+    double_link_on_2: bool = False,
+) -> float:
+    """Dynamic cross-check of :func:`ring_all_reduce_time`.
+
+    Builds the ``2(n-1)`` neighbour-shift phases of a bidirectional ring
+    all-reduce over physical dimension ``axis``
+    (:func:`repro.network.patterns.ring_all_reduce_phases`) and drains
+    them through the flow simulator.  For a contiguous wrapped ring the
+    result equals the closed form exactly — the test suite pins it — so
+    the prices :func:`assign_axes` hands to the roofline are *derived*
+    from dynamics, not only asserted.
+    """
+    from .netsim import simulate_phases
+    from .patterns import ring_all_reduce_phases
+
+    phases = ring_all_reduce_phases(dims, axis, bytes_in)
+    return simulate_phases(
+        dims, phases, link_bw=link_bw, double_link_on_2=double_link_on_2
+    ).total_time
+
+
 # ---------------------------------------------------------------------------
 # Axis assignment: mapping logical mesh axes onto physical torus dimensions.
 # ---------------------------------------------------------------------------

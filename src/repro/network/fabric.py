@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Iterable, Iterator, Optional, Sequence, Tuple
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from . import geometry
 from .geometry import Geometry, canonical, volume
@@ -223,7 +223,7 @@ def slice_fabric(pod: TorusFabric, geometry_: Sequence[int]) -> TorusFabric:
     return TorusFabric(tuple(dims), tuple(wrap), pod.link_bw, pod.double_link_on_2)
 
 
-def ranked_slice_geometries(pod: TorusFabric, chips: int) -> list:
+def ranked_slice_geometries(pod: TorusFabric, chips: int) -> List[Tuple[Geometry, int]]:
     """All cuboid slice geometries of the requested size that fit the pod,
     as (geometry, bisection_links) pairs, best first (max bisection, ties
     broken toward the lexicographically-smallest canonical geometry).  This

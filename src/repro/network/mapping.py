@@ -156,6 +156,21 @@ def toroidal_hops(
     return around.sum(axis=1)
 
 
+def mapping_traffic(coords: np.ndarray, traffic: RankTraffic) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Rank-space traffic translated into machine coordinates by a mapping.
+
+    ``(src, dst, vol)`` with endpoints ``coords[src_rank]`` /
+    ``coords[dst_rank]`` — the message-level counterpart of
+    :func:`mapping_loads`, ready for the flow simulator
+    (:mod:`repro.network.netsim`) or any other consumer that needs
+    concrete endpoints rather than a routed load tensor."""
+    rsrc, rdst, vol = traffic
+    if rsrc.shape[0] == 0:
+        empty = np.zeros((0, coords.shape[1]), dtype=np.int64)
+        return empty, empty.copy(), np.zeros(0)
+    return coords[rsrc], coords[rdst], np.asarray(vol, dtype=np.float64)
+
+
 def mapping_loads(
     dims: Sequence[int],
     coords: np.ndarray,
@@ -408,11 +423,25 @@ class RankMapping:
     #: the machine torus (write-locked; what the congestion score reduces)
     #: — consumers reuse it instead of re-routing the pattern.
     loads: Optional[np.ndarray] = None
+    #: The scored rank-space traffic itself (``src_rank, dst_rank, vol``)
+    #: — kept so message-level consumers (:meth:`machine_traffic`) never
+    #: have to reconstruct it, which would be impossible for explicit
+    #: traffic (``pattern == "explicit"``).
+    rank_traffic: Optional[RankTraffic] = None
 
     @property
     def num_ranks(self) -> int:
         """Number of ranks (== cells of the placement)."""
         return int(self.coords.shape[0])
+
+    def machine_traffic(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The mapping's scored traffic as machine-coordinate messages
+        (``src, dst, vol``) — the message-level counterpart of
+        :attr:`loads`, ready for the flow simulator."""
+        if self.rank_traffic is None:
+            empty = np.zeros((0, len(self.dims)), dtype=np.int64)
+            return empty, empty.copy(), np.zeros(0)
+        return mapping_traffic(self.coords, self.rank_traffic)
 
     @property
     def recovered_congestion(self) -> float:
@@ -530,6 +559,7 @@ def map_ranks(
         identity_score=identity_score,
         wrap=tuple(bool(x) for x in wrap) if wrap is not None else None,
         loads=loads,
+        rank_traffic=traffic,
     )
 
 

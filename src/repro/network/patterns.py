@@ -156,6 +156,68 @@ def transpose(dims: Sequence[int], vol: float = 1.0) -> Traffic:
 # ---------------------------------------------------------------------------
 # Ring collectives as explicit traffic.
 # ---------------------------------------------------------------------------
+def ring_all_reduce_phases(
+    dims: Sequence[int], axis: int, bytes_in: float
+) -> List[Traffic]:
+    """Bidirectional ring all-reduce over one physical axis as its
+    ``2(n-1)`` dependent phases (reduce-scatter then all-gather).
+
+    Each phase is one neighbour-shift step: every chip forwards half of a
+    ``bytes_in / n`` shard to each ring direction.  Feeding the list to
+    :func:`repro.network.netsim.simulate_phases` cross-checks the closed
+    form :func:`repro.network.collectives.ring_all_reduce_time`
+    dynamically (the phases share one traffic tuple — treat it as
+    read-only).
+    """
+    dims = tuple(int(a) for a in dims)
+    n = dims[axis]
+    if n <= 1:
+        return []
+    shard = bytes_in / n
+    s1, d1, v1 = ring_shift(dims, axis, +1, shard / 2.0)
+    s2, d2, v2 = ring_shift(dims, axis, -1, shard / 2.0)
+    phase = (
+        np.concatenate([s1, s2]),
+        np.concatenate([d1, d2]),
+        np.concatenate([v1, v2]),
+    )
+    return [phase] * (2 * (n - 1))
+
+
+def hotspot_line(dims: Sequence[int], axis: int = 0, vol: float = 1.0) -> Traffic:
+    """A deliberately skewed two-class workload for routing studies.
+
+    The vertices of one line (all coordinates 0 except ``axis``) run a
+    ring shift among themselves *and* send the same shift to the parallel
+    line halfway across the next non-trivial dimension.  Dimension-ordered
+    routing stacks both classes on the hotspot line's links; a least-loaded
+    dimension order routes the second class around them — the pattern where
+    ``repro.network.netsim.compare_routing`` shows what adaptive routing
+    *can* recover (unlike the geometry-induced contention of balanced
+    patterns, where it recovers nothing).
+    """
+    dims = tuple(int(a) for a in dims)
+    a = dims[axis]
+    partner = next(
+        (k for k in range(len(dims)) if k != axis and dims[k] > 1), None
+    )
+    if a < 4 or partner is None:
+        raise ValueError(
+            f"hotspot_line needs dims[{axis}] >= 4 and a second non-trivial "
+            f"dimension, got {dims}"
+        )
+    shift = max(1, a // 2 - 1)  # long but tie-free shift along the line
+    line = np.zeros((a, len(dims)), dtype=np.int64)
+    line[:, axis] = np.arange(a)
+    near = line.copy()
+    near[:, axis] = (np.arange(a) + shift) % a
+    far = near.copy()
+    far[:, partner] = dims[partner] // 2
+    src = np.concatenate([line, line])
+    dst = np.concatenate([near, far])
+    return _traffic(src, dst, vol)
+
+
 def ring_all_gather(dims: Sequence[int], axis: int, bytes_out: float) -> Traffic:
     """Bidirectional ring all-gather over one physical axis, expressed as the
     total per-step neighbour traffic: each chip forwards (n-1)/n of the

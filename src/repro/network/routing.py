@@ -48,6 +48,19 @@ from .fabric import Torus
 
 Coord = Tuple[int, ...]
 
+__all__ = [
+    "Coord",
+    "LinkLoads",
+    "PairingPrediction",
+    "all_to_all_max_load",
+    "max_link_load",
+    "pairing_speedup",
+    "predict_pairing_time",
+    "route_dor",
+    "simulate_pattern",
+    "uniform_offset_max_load",
+]
+
 
 # ---------------------------------------------------------------------------
 # The vectorized engine.

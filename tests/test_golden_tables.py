@@ -144,3 +144,38 @@ def test_partition_analysis_example_end_to_end():
     for _, scheduled, identity_c, mapped_c in mapped_replay:
         assert int(scheduled) > 0
         assert float(mapped_c) <= float(identity_c) + 1e-9
+    # Netsim validation table: the static predictions are confirmed by the
+    # flow simulator row by row, and the best/worst 512-node geometries'
+    # simulated slowdown ratio reproduces the paper's ~2x gap within 10%.
+    assert "Predicted vs simulated contention" in out
+    assert "512-node best (8,8,8): predicted x2.0  simulated x2.00" in out
+    assert "512-node worst (16,16,2): predicted x4.0  simulated x4.00" in out
+    ratio = re.search(r"512-node worst/best simulated ratio: x([\d.]+)", out)
+    assert ratio is not None
+    assert abs(float(ratio.group(1)) - 2.0) <= 0.2  # the paper's gap, +-10%
+    assert (
+        "Mira 4-midplane worst (4, 1, 1, 1) vs best (2, 2, 1, 1): "
+        "predicted x2.00, simulated x2.00" in out
+    )
+    assert (
+        "JUQUEEN 8-midplane worst (4, 2, 1, 1) vs best (2, 2, 2, 1): "
+        "predicted x2.00, simulated x2.00" in out
+    )
+    # Routing study: minimal-adaptive recovers nothing of the pairing
+    # benchmark's geometry-induced contention but half of the hotspot's.
+    assert "pairing on (16, 16, 2): makespan 4.0 -> 4.0, recovered 0%" in out
+    assert "hotspot line on (8, 8): makespan 6.0 -> 3.0, recovered 50%" in out
+    # Simulated-contention replay: both machines run end-to-end and every
+    # job's simulated completion respects the static max-load bound; the
+    # forced corridor pair shows real interference when isolation breaks.
+    sim_replay = re.findall(
+        r"(Mira|JUQUEEN): scheduled\s+(\d+)\s+all jobs >= static bound: (\w+)"
+        r"\s+mean slowdown x([\d.]+)\s+max x([\d.]+)",
+        out,
+    )
+    assert {name for name, *_ in sim_replay} == {"Mira", "JUQUEEN"}
+    for _, scheduled, bounded, mean_s, max_s in sim_replay:
+        assert int(scheduled) > 0
+        assert bounded == "True"
+        assert float(max_s) >= float(mean_s) >= 1.0
+    assert "slows the small job x1.40" in out

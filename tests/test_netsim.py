@@ -1,0 +1,414 @@
+"""Property and behaviour tests for the flow-level simulator.
+
+Pins the three agreements at the heart of the netsim subsystem:
+
+    DOR path enumeration   ==  route_dor's load tensor (link for link)
+    vectorized simulator   ==  per-flow Python reference oracle
+    simulated makespan     ==  analytic max_link_load for steady patterns
+                           >=  it for every pattern (conservation)
+
+plus the consumers: phased ring all-reduce cross-checking the collective
+closed form, the minimal-adaptive router (recovers nothing on
+translation-invariant patterns, a real fraction on hotspots), the
+``simulate_queue(contention="simulated")`` wiring (per-job slowdowns
+bounded below by the static max-load proxy on every job), the forced
+corridor-interference pair the static model only scores, and the
+``plan_slice(simulate=True)`` bridge.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from reference_netsim import paths_to_reference, reference_simulate
+
+from repro.launch.mesh import plan_slice
+from repro.network import (
+    AxisEmbedding,
+    ElongatedPolicy,
+    IsoperimetricPolicy,
+    JobRequest,
+    MachineState,
+    TorusFabric,
+    adaptive_paths,
+    assign_axes,
+    bisection_pairing,
+    compare_routing,
+    dor_paths,
+    hotspot_line,
+    link_capacities,
+    nearest_neighbor_halo,
+    random_permutation,
+    ring_all_reduce_phases,
+    ring_all_reduce_time,
+    simulate_flows,
+    simulate_phases,
+    simulate_queue,
+    simulate_traffic,
+    simulated_ring_all_reduce_time,
+    uniform_shift,
+    validate_prediction,
+)
+from repro.network.geometry import volume
+from repro.network.placement import placement_all_to_all_traffic, placement_loads
+from repro.network.routing import max_link_load, route_dor
+
+
+def _random_fabric(rng, max_cells=100):
+    """Random torus dims <= 4D with a bounded cell count."""
+    nd = int(rng.integers(1, 5))
+    while True:
+        dims = tuple(int(rng.integers(1, 9)) for _ in range(nd))
+        if volume(dims) <= max_cells:
+            return dims
+
+
+def _random_traffic(rng, dims, max_messages=40):
+    m = int(rng.integers(1, max_messages))
+    src = np.stack([rng.integers(0, a, m) for a in dims], axis=1)
+    dst = np.stack([rng.integers(0, a, m) for a in dims], axis=1)
+    vol = rng.random(m) + 0.05
+    return src, dst, vol
+
+
+def _random_pattern(rng, dims):
+    """A random named pattern or random explicit traffic."""
+    kind = int(rng.integers(0, 4))
+    if kind == 0:
+        off = tuple(int(rng.integers(0, a)) for a in dims)
+        return uniform_shift(dims, off)
+    if kind == 1:
+        return nearest_neighbor_halo(dims)
+    if kind == 2:
+        return random_permutation(dims, seed=int(rng.integers(0, 10**6)))
+    return _random_traffic(rng, dims)
+
+
+# ---------------------------------------------------------------------------
+# Path enumeration == route_dor.
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_dor_paths_match_route_dor(seed):
+    """The simulator's DOR link enumeration reproduces route_dor's load
+    tensor exactly — both tie policies — and the adaptive router conserves
+    the total (minimal) hop volume."""
+    rng = np.random.default_rng(seed)
+    dims = _random_fabric(rng)
+    src, dst, vol = _random_traffic(rng, dims)
+    for split in (True, False):
+        paths = dor_paths(dims, src, dst, vol, split_ties=split)
+        expected = route_dor(dims, src, dst, vol, split_ties=split)
+        np.testing.assert_allclose(paths.link_loads(), expected, atol=1e-12)
+        adaptive = adaptive_paths(dims, src, dst, vol, split_ties=split)
+        assert adaptive.link_loads().sum() == pytest.approx(expected.sum())
+
+
+# ---------------------------------------------------------------------------
+# Vectorized simulator == per-flow reference.
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_simulator_matches_reference(seed):
+    """Per-flow completion times and the makespan agree with the pure-
+    Python fluid oracle on random fabrics, patterns and conventions."""
+    rng = np.random.default_rng(seed)
+    dims = _random_fabric(rng, max_cells=60)
+    traffic = _random_pattern(rng, dims)
+    double = bool(rng.integers(0, 2))
+    paths = dor_paths(dims, *traffic)
+    res = simulate_flows(paths, double_link_on_2=double)
+    links_of_flow, capacity = paths_to_reference(paths, 1.0, double)
+    ref_completion, ref_makespan = reference_simulate(
+        paths.vol.tolist(), links_of_flow, capacity
+    )
+    assert res.makespan == pytest.approx(ref_makespan, rel=1e-6, abs=1e-9)
+    np.testing.assert_allclose(
+        res.flow_completion, np.asarray(ref_completion), rtol=1e-6, atol=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's validation property (satellite: hypothesis-tested).
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_steady_patterns_match_prediction(seed):
+    """On random fabrics <= 4D with unit bandwidth, the simulated makespan
+    of any uniform-shift pattern equals the analytic max_link_load (the
+    contention-free/steady case of the paper's validation experiment)."""
+    rng = np.random.default_rng(seed)
+    dims = _random_fabric(rng)
+    off = tuple(int(rng.integers(0, a)) for a in dims)
+    double = bool(rng.integers(0, 2))
+    traffic = uniform_shift(dims, off)
+    v = validate_prediction(dims, traffic, double_link_on_2=double)
+    predicted = max_link_load(dims, route_dor(dims, *traffic), double)
+    assert v.predicted_time == pytest.approx(predicted)
+    if predicted == 0.0:
+        assert v.simulated_time == 0.0
+    else:
+        assert v.matched, (dims, off, v.predicted_time, v.simulated_time)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_makespan_never_beats_prediction(seed):
+    """No pattern ever finishes faster than max_link_load / link_bw —
+    conservation through the most loaded link — on random fabrics,
+    random patterns, both link conventions."""
+    rng = np.random.default_rng(seed)
+    dims = _random_fabric(rng, max_cells=60)
+    traffic = _random_pattern(rng, dims)
+    double = bool(rng.integers(0, 2))
+    v = validate_prediction(dims, traffic, double_link_on_2=double)
+    assert v.bounded, (dims, v.predicted_time, v.simulated_time)
+
+
+def test_validation_concrete_pairing_cases():
+    """The 512-node geometries of the example's table: simulated pairing
+    slowdown 2.0 on the (8,8,8) cube vs 4.0 on the (16,16,2) slab — the
+    paper's x2 avoidable-contention gap, derived dynamically."""
+    for dims, expected in [((8, 8, 8), 2.0), ((16, 8, 4), 4.0), ((16, 16, 2), 4.0)]:
+        res = simulate_traffic(dims, bisection_pairing(dims))
+        assert res.makespan == pytest.approx(expected)
+        assert res.slowdown == pytest.approx(expected)
+        v = validate_prediction(dims, bisection_pairing(dims))
+        assert v.matched and v.ratio == pytest.approx(1.0)
+
+
+def test_simulator_reports_utilization_timeline():
+    dims = (6, 4)
+    res = simulate_traffic(
+        dims, random_permutation(dims, seed=3), record_utilization=True
+    )
+    assert res.steps == len(res.timeline) >= 1
+    last_end = 0.0
+    for sample in res.timeline:
+        assert sample.start == pytest.approx(last_end)
+        assert 0.0 < sample.max_utilization <= 1.0 + 1e-9
+        assert sample.utilization.shape == (2, 2) + dims
+        last_end = sample.end
+    assert last_end == pytest.approx(res.makespan)
+
+
+def test_double_link_capacity_convention():
+    """A length-2 dimension drains twice as fast under the BG/Q double-link
+    convention, matching the analytic halving in max_link_load."""
+    dims = (2, 4)
+    traffic = uniform_shift(dims, (1, 0))
+    bgq = simulate_traffic(dims, traffic, double_link_on_2=True)
+    tpu = simulate_traffic(dims, traffic, double_link_on_2=False)
+    assert bgq.makespan == pytest.approx(tpu.makespan / 2.0)
+    cap = link_capacities(dims, 1.0, True)
+    assert cap[0].max() == 2.0 and cap[1].max() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Phased collectives cross-check the closed forms.
+# ---------------------------------------------------------------------------
+def test_ring_all_reduce_phases_match_closed_form():
+    """2(n-1) simulated neighbour-shift phases reproduce the analytic
+    bidirectional ring all-reduce time exactly on a wrapped ring."""
+    dims = (8, 4)
+    bytes_in = 64.0
+    analytic = ring_all_reduce_time(
+        bytes_in, AxisEmbedding(size=8, stride=1, wrapped=True), 1.0
+    )
+    phases = ring_all_reduce_phases(dims, 0, bytes_in)
+    assert len(phases) == 14
+    sim = simulate_phases(dims, phases)
+    assert sim.total_time == pytest.approx(analytic)
+    assert simulated_ring_all_reduce_time(dims, 0, bytes_in) == pytest.approx(analytic)
+
+
+def test_assign_axes_cost_cross_checks_dynamically():
+    """The price assign_axes hands the roofline for a physically-aligned
+    axis equals the flow-simulated phase schedule on the same fabric."""
+    fabric = TorusFabric.tpu((8, 4))
+    assignment = assign_axes(fabric, {"model": 8, "data": 4})
+    emb = assignment.embedding("model")
+    analytic = ring_all_reduce_time(1024.0, emb, fabric.link_bw)
+    axis = assignment.phys_groups[assignment.axis_names.index("model")][0]
+    simulated = simulated_ring_all_reduce_time(
+        fabric.dims, axis, 1024.0, fabric.link_bw, fabric.double_link_on_2
+    )
+    assert simulated == pytest.approx(analytic)
+
+
+# ---------------------------------------------------------------------------
+# Routing-mode comparison: what routing alone can(not) recover.
+# ---------------------------------------------------------------------------
+def test_adaptive_recovers_nothing_on_translation_invariant_patterns():
+    """Minimal-adaptive routing leaves every translation-invariant pattern
+    at exactly the DOR makespan: the avoidable contention of the paper is
+    a *geometry* property no minimal router can remove."""
+    for dims, traffic in [
+        ((16, 16, 2), bisection_pairing((16, 16, 2))),
+        ((8, 8, 8), bisection_pairing((8, 8, 8))),
+        ((8, 8), uniform_shift((8, 8), (2, 3))),
+        ((8, 4, 2), nearest_neighbor_halo((8, 4, 2))),
+    ]:
+        c = compare_routing(dims, traffic)
+        assert c.adaptive_makespan == pytest.approx(c.dor_makespan)
+        assert c.recovered_fraction == pytest.approx(0.0)
+
+
+def test_adaptive_recovers_hotspot_contention():
+    """On the deliberately skewed hotspot workload the adaptive dimension
+    order routes the cross-traffic around the congested line and recovers
+    a real fraction of the DOR makespan."""
+    dims = (8, 8)
+    c = compare_routing(dims, hotspot_line(dims))
+    assert c.dor_makespan == pytest.approx(6.0)
+    assert c.adaptive_makespan == pytest.approx(3.0)
+    assert c.recovered_fraction == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# simulate_queue(contention="simulated").
+# ---------------------------------------------------------------------------
+def _replay_jobs(rng, n, sizes):
+    arrival = np.cumsum(rng.exponential(0.25, size=n))
+    return [
+        JobRequest(
+            i,
+            int(rng.choice(sizes)),
+            True,
+            float(rng.lognormal(0.0, 0.5) + 0.3),
+            float(arrival[i]),
+        )
+        for i in range(n)
+    ]
+
+
+@pytest.mark.parametrize("mapping_pattern", [None, "ring"])
+def test_simulated_contention_replay_respects_static_bound(mapping_pattern):
+    """The Mira replay runs end-to-end under contention="simulated" and
+    every job's simulated completion is bounded below by the static
+    max-load proxy (the acceptance criterion; conservation makes anything
+    else a simulator bug)."""
+    rng = np.random.default_rng(0)
+    jobs = _replay_jobs(rng, 25, [1, 2, 4, 8, 16, 24])
+    res = simulate_queue(
+        (4, 4, 3, 2),
+        jobs,
+        IsoperimetricPolicy(),
+        backfill=True,
+        contention="simulated",
+        mapping_pattern=mapping_pattern,
+    )
+    assert len(res.jobs) == 25 and not res.rejected
+    for job in res.jobs:
+        assert job.simulated_comm_time is not None
+        assert job.simulated_comm_time + 1e-9 >= job.comm_lower_bound
+        assert job.simulated_slowdown >= 1.0 - 1e-9
+    assert res.mean_simulated_slowdown >= 1.0 - 1e-9
+
+
+def test_simulated_contention_juqueen_replay():
+    """Same bound on the contended JUQUEEN torus (7-ring spills exist),
+    under both a baseline and the paper's policy; the static fields keep
+    matching the static-only run."""
+    rng = np.random.default_rng(1)
+    jobs = _replay_jobs(rng, 20, [4, 5, 6, 8, 10, 12, 20])
+    for policy in (ElongatedPolicy(), IsoperimetricPolicy()):
+        res = simulate_queue(
+            (7, 2, 2, 2), jobs, policy, backfill=True, contention="simulated"
+        )
+        static = simulate_queue(
+            (7, 2, 2, 2), jobs, policy, backfill=True, contention="static"
+        )
+        assert [j.placement for j in res.jobs] == [j.placement for j in static.jobs]
+        for job in res.jobs:
+            assert job.simulated_comm_time + 1e-9 >= job.comm_lower_bound
+
+
+def test_simulated_contention_validates_args():
+    with pytest.raises(ValueError, match="contention"):
+        simulate_queue((2, 2), [], IsoperimetricPolicy(), contention="bogus")
+    with pytest.raises(ValueError, match="mapping_pattern"):
+        simulate_queue((2, 2), [], IsoperimetricPolicy(), mapping_pattern="ring")
+
+
+def test_static_only_jobs_carry_no_simulated_fields():
+    res = simulate_queue(
+        (2, 2, 2),
+        [JobRequest(0, 4, duration=1.0)],
+        IsoperimetricPolicy(),
+        measure_contention=True,
+    )
+    job = res.jobs[0]
+    assert job.simulated_comm_time is None and job.comm_lower_bound == 0.0
+    assert job.simulated_slowdown == 1.0
+    assert res.mean_simulated_slowdown == 1.0
+
+
+def test_forced_corridor_interference_slows_the_small_job():
+    """The interference the static model only *scores* is derived as real
+    completion-time loss: a span-5 job spilling over JUQUEEN's 7-ring
+    slows a 2-wide corridor job by a measurable factor, while the big job
+    stays at its own bound."""
+    dims = (7, 2, 2)
+    big = placement_all_to_all_traffic(dims, (5, 2, 2), (0, 0, 0))
+    small = placement_all_to_all_traffic(dims, (2, 2, 2), (5, 0, 0))
+    joint = tuple(np.concatenate(parts) for parts in zip(big, small))
+    res = simulate_traffic(dims, joint)
+    n_big = big[2].shape[0]
+    t_big = float(res.completion[:n_big].max())
+    t_small = float(res.completion[n_big:].max())
+    solo_small = simulate_traffic(dims, small).makespan
+    bound_big = max_link_load(dims, placement_loads(dims, (5, 2, 2), (0, 0, 0)))
+    assert t_big == pytest.approx(bound_big)
+    assert t_small > solo_small * 1.2  # measured 1.4x
+    assert t_small == pytest.approx(0.7)
+
+
+# ---------------------------------------------------------------------------
+# plan_slice(simulate=True).
+# ---------------------------------------------------------------------------
+def test_plan_slice_simulate_records_slowdown():
+    state = MachineState((16, 16))
+    plan = plan_slice(16, state=state, job_id=0, simulate=True)
+    assert plan.simulated_slowdown is not None
+    assert plan.simulated_slowdown >= 1.0 - 1e-9
+    # the mapped halo traffic is steady, so the dynamic multiplier equals
+    # the mapping engine's predicted congestion
+    assert plan.simulated_slowdown == pytest.approx(plan.mapping_congestion)
+    geometry_only = plan_slice(16, simulate=True)
+    assert geometry_only.simulated_slowdown is None
+
+
+def test_mapping_machine_traffic_supports_explicit_patterns():
+    """RankMapping.machine_traffic reuses the scored rank traffic, so it
+    works for explicit (non-named) traffic too, and simulating it
+    reproduces the mapping's own load tensor."""
+    from repro.network import map_ranks
+    from repro.network.routing import route_dor
+
+    rank_traffic = (
+        np.array([0, 1, 2, 3]),
+        np.array([3, 2, 1, 0]),
+        np.array([1.0, 2.0, 1.0, 2.0]),
+    )
+    m = map_ranks((4, 4), (2, 2), (1, 1), traffic=rank_traffic)
+    assert m.pattern == "explicit"
+    src, dst, vol = m.machine_traffic()
+    np.testing.assert_allclose(route_dor((4, 4), src, dst, vol), m.loads)
+    paths = dor_paths((4, 4), src, dst, vol)
+    np.testing.assert_allclose(paths.link_loads(), m.loads)
+
+
+def test_empty_and_degenerate_traffic():
+    empty = (
+        np.zeros((0, 2), dtype=np.int64),
+        np.zeros((0, 2), dtype=np.int64),
+        np.zeros(0),
+    )
+    res = simulate_traffic((4, 4), empty)
+    assert res.makespan == 0.0 and res.slowdown == 1.0 and res.steps == 0
+    # self-messages move nothing and complete at t=0
+    self_tr = (np.array([[1, 1]]), np.array([[1, 1]]), np.array([5.0]))
+    res = simulate_traffic((4, 4), self_tr)
+    assert res.makespan == 0.0
+    assert res.completion.tolist() == [0.0]

@@ -276,3 +276,36 @@ def test_core_shims_reexport_network_objects():
     # the historical constructor signature still works
     fab = c_collectives.TorusFabric((16, 16), (True, True))
     assert fab.bisection_links() == 32
+
+
+def test_core_shims_emit_one_shot_deprecation_warning():
+    """Each re-export shim warns at import pointing at repro.network.
+
+    Module caching makes the warning one-shot per process, so the test
+    re-executes each (already imported) shim module with importlib.reload
+    inside pytest.warns; a fresh import of the sibling package module must
+    stay silent."""
+    import importlib
+    import subprocess
+    import sys
+
+    from repro.core import allocation, collectives, contention, torus
+
+    for shim in (torus, contention, collectives, allocation):
+        with pytest.warns(DeprecationWarning, match="repro.network"):
+            importlib.reload(shim)
+    # The replacement subsystem imports clean even with DeprecationWarning
+    # promoted to an error (fresh interpreter: no module cache to mask it).
+    import os
+    from pathlib import Path
+
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c", "import repro.network"],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+    assert proc.returncode == 0, proc.stderr

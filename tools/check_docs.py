@@ -38,6 +38,7 @@ AUDITED_MODULES = [
     "repro.network.fabric",
     "repro.network.routing",
     "repro.network.patterns",
+    "repro.network.netsim",
     "repro.network.collectives",
     "repro.network.placement",
     "repro.network.allocation",
