@@ -1,0 +1,152 @@
+"""Isoperimetry-engine micro-benchmark: batched divisor-meshgrid cuts vs the
+per-cuboid Python oracle.
+
+Acceptance benchmark for the ``repro.network.isoperimetry`` subsystem:
+sweeping ``optimal_cuboid`` + ``worst_cuboid`` over the paper's Mira
+partition sizes on the node-level torus (16x16x12x8x2) must produce results
+*identical* to the per-cuboid loop oracle (kept under
+``tests/reference_isoperimetry.py``) and be >= 10x faster in aggregate; a
+second row runs the partition advisor end-to-end (Mira scheduler table,
+node level) and records the paper's predicted geometry speedups.
+
+Run standalone (writes BENCH_isoperimetry.json):
+
+    PYTHONPATH=src python benchmarks/bench_isoperimetry.py [--json PATH]
+
+or via the harness (`PYTHONPATH=src python -m benchmarks.run`), which
+registers :func:`isoperimetry_microbench`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.network.isoperimetry import (
+    advise_policy_table,
+    cut_table,
+    optimal_cuboid,
+    worst_cuboid,
+)
+
+_REPO = Path(__file__).resolve().parents[1]
+
+# Mira's node-level torus and the scheduler partition sizes in nodes.
+DIMS = (16, 16, 12, 8, 2)
+SIZES = [mp * 512 for mp in (1, 2, 4, 8, 16, 24, 32, 48)]
+# The acceptance bar is 10x; BENCH_ISOPERIMETRY_MIN_SPEEDUP lets loaded CI
+# runners relax the timing gate without weakening the result-identity check
+# (mirroring BENCH_ROUTING_MIN_SPEEDUP).
+TARGET_SPEEDUP = float(os.environ.get("BENCH_ISOPERIMETRY_MIN_SPEEDUP", "10"))
+
+
+def _reference_module():
+    """Import the per-cuboid oracle lazily — it lives with the tests, and the
+    harness must not mutate sys.path unless this benchmark actually runs."""
+    tests_dir = str(_REPO / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    import reference_isoperimetry
+
+    return reference_isoperimetry
+
+
+def _engine_sweep() -> list:
+    """Optimal + worst cuboid per size from ONE batched table each — the
+    engine's design point: a single enumeration serves every consumer."""
+    out = []
+    for t in SIZES:
+        tbl = cut_table(DIMS, t)
+        out.append((tbl.min_cut_geometry(), tbl.max_cut_geometry()))
+    return out
+
+
+def _time_engine(repeats: int = 3) -> Tuple[float, list]:
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = _engine_sweep()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _time_reference() -> Tuple[float, list]:
+    ref = _reference_module()  # import outside the timed region
+    t0 = time.perf_counter()
+    out = [
+        (
+            ref.reference_optimal_cuboid(DIMS, t),
+            ref.reference_worst_cuboid(DIMS, t),
+        )
+        for t in SIZES
+    ]
+    return time.perf_counter() - t0, out
+
+
+def isoperimetry_microbench() -> Tuple[List[dict], str]:
+    t_fast, engine = _time_engine()
+    t_slow, oracle = _time_reference()
+    speedup = t_slow / t_fast
+    for t, (opt, wst), (ref_opt, ref_wst) in zip(SIZES, engine, oracle):
+        assert opt == ref_opt[:2], (t, opt, ref_opt)
+        assert wst == ref_wst[:2], (t, wst, ref_wst)
+        # the full CuboidOptimum API (with the Theorem 3.1 bound) agrees too
+        o, w = optimal_cuboid(DIMS, t), worst_cuboid(DIMS, t)
+        assert (o.geometry, o.cut) == ref_opt[:2] and abs(o.bound - ref_opt[2]) < 1e-9
+        assert (w.geometry, w.cut) == ref_wst[:2] and abs(w.bound - ref_wst[2]) < 1e-9
+    assert speedup >= TARGET_SPEEDUP, f"speedup {speedup:.1f}x < {TARGET_SPEEDUP}x"
+
+    # The advisor end-to-end: Mira's scheduler table at node level (the
+    # paper's Tables 4-6 quantity; predicted speedups only — the simulated
+    # cross-check is exercised by the example and the golden tests).
+    from repro.core.bgq import MIDPLANE_DIMS, MIRA, MIRA_SCHEDULER_PARTITIONS
+
+    t0 = time.perf_counter()
+    advice = advise_policy_table(
+        MIRA.midplane_dims, MIRA_SCHEDULER_PARTITIONS, unit_node_dims=MIDPLANE_DIMS
+    )
+    t_advise = time.perf_counter() - t0
+    improved = {a.units: a.predicted_speedup for a in advice if not a.is_current_optimal}
+
+    geometries = sum(len(cut_table(DIMS, t)) for t in SIZES)
+    rows = [
+        {
+            "case": "optimal+worst cuboid sweep",
+            "dims": list(DIMS),
+            "sizes": SIZES,
+            "geometries": geometries,
+            "vectorized_s": round(t_fast, 5),
+            "reference_s": round(t_slow, 4),
+            "speedup": round(speedup, 1),
+        },
+        {
+            "case": "partition advisor (Mira scheduler table)",
+            "machine": "Mira",
+            "sizes": sorted(MIRA_SCHEDULER_PARTITIONS),
+            "improved": {str(k): round(v, 3) for k, v in sorted(improved.items())},
+            "advise_s": round(t_advise, 4),
+        },
+    ]
+    derived = f"speedup={speedup:.0f}x,improved_sizes={len(improved)}"
+    return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_isoperimetry.json", help="output path")
+    args = ap.parse_args()
+    rows, derived = isoperimetry_microbench()
+    out = Path(args.json)
+    out.write_text(
+        json.dumps({"benchmark": "isoperimetry_microbench", "rows": rows}, indent=1)
+    )
+    print(f"isoperimetry_microbench: {derived} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

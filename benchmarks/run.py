@@ -19,6 +19,7 @@ from benchmarks.paper_tables import (
     tpu_slice_geometry,
 )
 from benchmarks.bench_allocation import allocation_microbench
+from benchmarks.bench_isoperimetry import isoperimetry_microbench
 from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_netsim import netsim_microbench
 from benchmarks.bench_routing import routing_microbench
@@ -38,6 +39,7 @@ BENCHMARKS = [
     ("allocation_microbench", allocation_microbench),
     ("mapping_microbench", mapping_microbench),
     ("netsim_microbench", netsim_microbench),
+    ("isoperimetry_microbench", isoperimetry_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]

@@ -37,6 +37,7 @@ from repro.network import (
     simulate_queue,
     simulate_traffic,
 )
+from repro.network.isoperimetry import advise_partition, advise_policy_table
 from repro.network.placement import placement_all_to_all_traffic
 from repro.network.routing import predict_pairing_time
 
@@ -56,6 +57,53 @@ for chips in (16, 32, 64):
     print(f"  {chips:3d} chips: best {plan.slice_geometry} (bisection {plan.slice_bisection_links}) "
           f"vs worst {plan.worst_geometry} ({plan.worst_bisection_links}) "
           f"-> avoidable contention x{plan.avoidable_contention:.1f}")
+
+
+# ---------------------------------------------------------------------------
+# The partition advisor (paper Tables 4-6 as a decision aid): for every size
+# of Mira's scheduler list — and JUQUEEN's worst-vs-best baseline — the
+# current geometry vs the isoperimetric optimum, the Theorem 3.1 optimality
+# certificate, the predicted contention-bound speedup, and (for the sizes
+# drained through the flow simulator) the simulated cross-check: steady
+# pairing traffic makes simulated == predicted exactly, so the x2 geometry
+# improvements are measured, not asserted.
+# ---------------------------------------------------------------------------
+SIMULATED_ADVISOR_SIZES = (4, 8, 16)  # node counts 2k-8k: seconds to drain
+
+
+def _advice_line(name: str, a) -> str:
+    line = (
+        f"  {name:>8} {a.units:3d} midplanes: {a.current_geometry} "
+        f"bw={a.current_bisection}"
+    )
+    if a.is_current_optimal:
+        return line + "  (already optimal)"
+    line += (
+        f" -> {a.optimal_geometry} bw={a.optimal_bisection}"
+        f"  efficiency {a.bisection_efficiency:.2f}"
+        f"  predicted x{a.predicted_speedup:.2f}"
+    )
+    if a.simulated_speedup is not None:
+        line += f"  simulated x{a.simulated_speedup:.2f}"
+    if a.certified:
+        line += "  [Thm 3.1 certified]"
+    return line
+
+
+print("\n== Partition advisor (paper Tables 4-6): policy table vs optimum ==")
+for a in advise_policy_table(
+    MIRA.midplane_dims, MIRA_SCHEDULER_PARTITIONS, unit_node_dims=MIDPLANE_DIMS
+):
+    if not a.is_current_optimal and a.units in SIMULATED_ADVISOR_SIZES:
+        a = advise_partition(
+            MIRA.midplane_dims, a.units, MIRA_SCHEDULER_PARTITIONS[a.units],
+            unit_node_dims=MIDPLANE_DIMS, simulate=True,
+        )
+    print(_advice_line("Mira", a))
+juqueen_advice = advise_partition(
+    JUQUEEN.midplane_dims, 8, unit_node_dims=MIDPLANE_DIMS, simulate=True
+)
+print(_advice_line("JUQUEEN", juqueen_advice) + "  (worst-geometry baseline)")
 
 
 # ---------------------------------------------------------------------------

@@ -2,15 +2,15 @@
 Schwartz, 2020) as a composable library.
 
 Layers:
-  isoperimetry          — the edge-isoperimetric analysis (Theorem 3.1).
   bgq                   — Blue Gene/Q machine models (paper reproduction).
   topology              — hypercube / HyperX / Dragonfly (paper Section 5).
 
 The fabric modeling that used to live here (torus geometry, DOR contention,
-collective cost model, allocation policies) moved to :mod:`repro.network`;
-the ``repro.core.{torus,contention,collectives,allocation}`` modules are
-deprecated re-export shims (see DESIGN.md).  This package's namespace keeps
-exporting the historical names.
+collective cost model, allocation policies, and now the edge-isoperimetric
+analysis) moved to :mod:`repro.network`; the
+``repro.core.{torus,contention,collectives,allocation,isoperimetry}``
+modules are deprecated re-export shims (see DESIGN.md).  This package's
+namespace keeps exporting the historical names.
 """
 
 from repro.network import (
@@ -39,7 +39,9 @@ from repro.network import (
     simulate_queue,
     avoidable_contention_ratio,
 )
-from .isoperimetry import (
+# Imported from the new home directly (not via the repro.core.isoperimetry
+# shim) so that `import repro.core` stays DeprecationWarning-clean.
+from repro.network.isoperimetry import (
     bollobas_leader_bound,
     theorem31_bound,
     lemma32_cut,

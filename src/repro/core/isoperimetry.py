@@ -1,134 +1,46 @@
-"""Edge-isoperimetric analysis of torus graphs (paper Section 3.1).
+"""Deprecated shim — the isoperimetric analysis now lives in
+:mod:`repro.network.isoperimetry`.
 
-Implements:
-
-* ``bollobas_leader_bound`` — Theorem 2.1 (cubic tori, Bollobás & Leader 1991).
-* ``theorem31_bound``       — Theorem 3.1, the paper's novel generalisation of
-  the edge-isoperimetric inequality to tori with *arbitrary* dimension sizes.
-* ``lemma32_cut``           — the explicit optimal-cuboid construction S_r of
-  Lemma 3.2 and its exact cut size.
-* ``optimal_cuboid``        — exact minimiser over all cuboid subsets (by
-  Lemma 3.3 this is the isoperimetric optimum among cuboids, conjectured
-  optimal among arbitrary subsets).
-* ``small_set_expansion``   — h_t(G) restricted to cuboid witnesses, the
-  quantity used by Ballard et al. (2016) to derive contention lower bounds.
-
-All cut sizes are in links, with unit capacity per link ("normalized
-bisection bandwidth" in the paper's tables).
+The per-cuboid Python loops that used to live here were replaced by the
+vectorized divisor-meshgrid engine (batched cuts of every same-volume
+geometry in one NumPy pass); the historical implementation survives as the
+property-test oracle under ``tests/reference_isoperimetry.py``.  Existing
+imports keep working; new code should import from
+``repro.network.isoperimetry`` (or ``repro.network``) directly.  See
+DESIGN.md for the deprecation path.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+import warnings
 
-from repro.network.fabric import Torus
-from repro.network.geometry import Geometry, canonical, theorem31_bound, volume
+# One-shot by module caching: Python executes this module (and hence the
+# warning) once per process, however many times it is imported.
+warnings.warn(
+    "repro.core.isoperimetry is a deprecated re-export shim; import from "
+    "repro.network instead (see DESIGN.md)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
+from repro.network.isoperimetry import (  # noqa: F401,E402
+    CuboidOptimum,
+    bisection_of_geometry,
+    bollobas_leader_bound,
+    lemma32_cut,
+    optimal_cuboid,
+    small_set_expansion,
+    theorem31_bound,
+    worst_cuboid,
+)
 
-def bollobas_leader_bound(n: int, D: int, t: int) -> float:
-    """Theorem 2.1: lower bound on |E(S, S̄)| for |S| = t in the cubic torus [n]^D."""
-    if t < 0 or t > n**D // 2:
-        raise ValueError("t must satisfy 0 <= t <= |V|/2")
-    if t == 0:
-        return 0.0
-    best = math.inf
-    for r in range(D):
-        val = 2.0 * (D - r) * n ** (r / (D - r)) * t ** ((D - r - 1) / (D - r))
-        best = min(best, val)
-    return best
-
-
-# theorem31_bound is implemented once in repro.network.geometry (it also
-# backs the odd-dimension bisection fallback there) and re-exported here.
-
-
-def lemma32_cut(dims: Sequence[int], t: int, r: int) -> Optional[Tuple[Geometry, int]]:
-    """Lemma 3.2: the explicit cuboid S_r and its exact cut, if it exists.
-
-    S_r fully covers the r smallest dimensions and is a cube of side
-    s = (t / k)^(1/(D-r)) in the remaining D-r dimensions, where k is the
-    product of the r smallest dims.  Returns ``None`` when s is not an
-    integer or S_r does not fit.
-    """
-    a = canonical(dims)
-    D = len(a)
-    if not 0 <= r < D:
-        raise ValueError(f"r must be in [0, {D}), got {r}")
-    k = math.prod(a[D - r:]) if r > 0 else 1
-    if t % k != 0:
-        return None
-    q = t // k
-    s = round(q ** (1.0 / (D - r)))
-    if s ** (D - r) != q:
-        return None
-    if s > min(a[: D - r]):
-        return None  # the cube side must fit in each uncovered dimension
-    geometry = canonical((s,) * (D - r) + tuple(a[D - r:]))
-    torus = Torus(a)
-    return geometry, torus.cuboid_cut(geometry)
-
-
-@dataclass(frozen=True)
-class CuboidOptimum:
-    geometry: Geometry
-    cut: int
-    bound: float
-
-    @property
-    def tight(self) -> bool:
-        return math.isclose(self.cut, self.bound, rel_tol=1e-9)
-
-
-def optimal_cuboid(torus: Torus, t: int) -> Optional[CuboidOptimum]:
-    """Exact minimum-cut cuboid of size t inside the torus (Lemma 3.3 optimum)."""
-    n = torus.num_vertices
-    if t <= 0 or t > n:
-        raise ValueError(f"t must be in (0, {n}], got {t}")
-    best_geom, best_cut = None, None
-    for c in torus.sub_cuboids(t):
-        cut = torus.cuboid_cut(c)
-        if best_cut is None or cut < best_cut:
-            best_geom, best_cut = c, cut
-    if best_geom is None:
-        return None
-    bound = theorem31_bound(torus.dims, t) if t <= n // 2 else float(best_cut)
-    return CuboidOptimum(best_geom, best_cut, bound)
-
-
-def worst_cuboid(torus: Torus, t: int) -> Optional[CuboidOptimum]:
-    """Maximum-cut cuboid of size t — the adversarial partition geometry."""
-    best_geom, best_cut = None, None
-    for c in torus.sub_cuboids(t):
-        cut = torus.cuboid_cut(c)
-        if best_cut is None or cut > best_cut:
-            best_geom, best_cut = c, cut
-    if best_geom is None:
-        return None
-    n = torus.num_vertices
-    bound = theorem31_bound(torus.dims, t) if t <= n // 2 else float(best_cut)
-    return CuboidOptimum(best_geom, best_cut, bound)
-
-
-def small_set_expansion(torus: Torus, t: int) -> float:
-    """h_t(G) over cuboid witnesses: min_{|A|<=t} cut(A) / (interior(A)+cut(A)).
-
-    For the regular tori considered here the minimiser is attained at the
-    bisection (paper, Section 2), so cuboid witnesses suffice.
-    """
-    best = math.inf
-    for size in range(1, t + 1):
-        for c in torus.sub_cuboids(size):
-            cut = torus.cuboid_cut(c)
-            interior = torus.cuboid_interior(c)
-            denom = interior + cut
-            if denom == 0:
-                continue
-            best = min(best, cut / denom)
-    return best
-
-
-def bisection_of_geometry(dims: Sequence[int]) -> int:
-    """Internal bisection (links) of a torus partition with the given dims."""
-    return Torus(dims).bisection_links()
+__all__ = [
+    "CuboidOptimum",
+    "bisection_of_geometry",
+    "bollobas_leader_bound",
+    "lemma32_cut",
+    "optimal_cuboid",
+    "small_set_expansion",
+    "theorem31_bound",
+    "worst_cuboid",
+]

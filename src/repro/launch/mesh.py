@@ -80,6 +80,11 @@ class MeshPlan:
     #: pod (makespan over the zero-contention bound; None unless
     #: ``plan_slice(..., simulate=True)`` ran on an occupancy-aware plan).
     simulated_slowdown: Optional[float] = None
+    #: Granted-over-best slice bisection: the chosen geometry's internal
+    #: bisection over the best rankable geometry of this size on an *empty*
+    #: pod — 1.0 for geometry-only plans; < 1.0 when occupancy forced the
+    #: planner down the ranked list.
+    bisection_efficiency: float = 1.0
 
     @property
     def avoidable_contention(self) -> float:
@@ -132,6 +137,11 @@ def plan_slice(
     wrapped ring.  Geometry-only plans keep ``mapping=None`` and the
     assumed embedding (the empty-pod answer is unchanged).
 
+    Every plan reports ``MeshPlan.bisection_efficiency`` — the chosen
+    slice's bisection over the best rankable geometry of this size on an
+    empty pod (1.0 unless occupancy forced a worse geometry), the per-plan
+    counterpart of the isoperimetry advisor's efficiency.
+
     ``simulate=True`` additionally drains the chosen mapping's traffic
     through the flow-level simulator (:mod:`repro.network.netsim`) and
     records the measured contention multiplier on
@@ -141,10 +151,12 @@ def plan_slice(
     """
     pod = pod or pod_fabric()
     placement: Optional[Placement] = None
+    best_bis: Optional[int] = None
     if state is None:
         if job_id is not None:
             raise ValueError("job_id requires a state (occupancy grid) to commit to")
         geom, bis = best_slice_geometry(pod, chips)
+        best_bis = bis
     else:
         if tuple(state.dims) != tuple(pod.dims):
             raise ValueError(
@@ -152,7 +164,9 @@ def plan_slice(
             )
         geom = None
         bis = 0
-        for g, b in ranked_slice_geometries(pod, chips):
+        ranked = ranked_slice_geometries(pod, chips)
+        best_bis = ranked[0][1]
+        for g, b in ranked:
             cand = best_placement(state.grid, g, state.traffic_loads())
             if cand is not None:
                 geom, bis = g, b
@@ -217,6 +231,7 @@ def plan_slice(
         placement=placement,
         mapping=mapping,
         simulated_slowdown=simulated_slowdown,
+        bisection_efficiency=(bis / best_bis if best_bis else 1.0),
     )
 
 

@@ -5,6 +5,11 @@ Single home of every geometry / fabric / routing primitive in the repo
 
   geometry    — canonical geometries, factorizations, exact cuboid cut and
                 interior counts, exact bisection search, ExplicitTorus.
+  isoperimetry— vectorized edge-isoperimetric engine: batched cuts of every
+                same-volume geometry via divisor meshgrids, Theorem 2.1/3.1
+                bounds with tightness certificates, bisection tables, and
+                the partition advisor (current-policy vs optimal geometry
+                with predicted + simulated speedups).
   fabric      — the unified TorusFabric (per-dimension wrap flags, BG/Q
                 double-link vs TPU single-link conventions), Torus compat
                 wrapper, slice planning.
@@ -24,7 +29,8 @@ Single home of every geometry / fabric / routing primitive in the repo
                 catalogue (identity / axis-permutation / gray-snake /
                 greedy refinement) scored by congestion + dilation.
 
-The historical ``repro.core.{torus,contention,collectives,allocation}``
+The historical
+``repro.core.{torus,contention,collectives,allocation,isoperimetry}``
 modules re-export from here and are deprecated.
 """
 
@@ -44,6 +50,29 @@ from .geometry import (
     volume,
 )
 from .geometry import bisection_links as torus_bisection_links
+from .isoperimetry import (
+    BisectionTable,
+    CuboidOptimum,
+    CutTable,
+    PartitionAdvice,
+    advise_partition,
+    advise_policy_table,
+    best_bisection_geometry,
+    bisection_of_geometry,
+    bisection_table,
+    bollobas_leader_bound,
+    cut_table,
+    fitting_geometries,
+    is_isoperimetrically_optimal,
+    lemma32_cut,
+    optimal_cuboid,
+    ranked_geometries,
+    scaled_node_dims,
+    small_set_expansion,
+    theorem31_bound,
+    worst_bisection_geometry,
+    worst_cuboid,
+)
 from .fabric import (
     DEFAULT_LINK_BW,
     POD_DCI_BW,

@@ -229,12 +229,17 @@ def ranked_slice_geometries(pod: TorusFabric, chips: int) -> List[Tuple[Geometry
     broken toward the lexicographically-smallest canonical geometry).  This
     single ranking backs both the geometry-only planner
     (:func:`best_slice_geometry`) and the occupancy-aware planner
-    (``repro.launch.mesh.plan_slice``), so they cannot drift apart."""
+    (``repro.launch.mesh.plan_slice``), so they cannot drift apart.
+    Candidates come from the isoperimetry engine's batched enumeration
+    (:func:`repro.network.isoperimetry.fitting_geometries`); each slice's
+    bisection stays the exact wrap-aware :func:`slice_fabric` computation."""
+    from .isoperimetry import fitting_geometries
+
+    candidates = [
+        tuple(int(x) for x in row) for row in fitting_geometries(pod.dims, chips)
+    ]
     ranked = sorted(
-        (
-            (g, slice_fabric(pod, g).bisection_links())
-            for g in geometry.sub_cuboids(pod.dims, chips)
-        ),
+        ((g, slice_fabric(pod, g).bisection_links()) for g in candidates),
         key=lambda t: (-t[1], t[0]),
     )
     if not ranked:

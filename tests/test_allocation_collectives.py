@@ -7,25 +7,23 @@ import math
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.allocation import (
+from repro.core.bgq import MIDPLANE_DIMS, MIRA_SCHEDULER_PARTITIONS
+from repro.network import (
+    AxisEmbedding,
+    CollectiveCostModel,
     ElongatedPolicy,
     HintedPolicy,
     IsoperimetricPolicy,
     JobRequest,
     ListPolicy,
     MachineState,
-    avoidable_contention_ratio,
-    simulate_queue,
-)
-from repro.core.bgq import MIDPLANE_DIMS, MIRA_SCHEDULER_PARTITIONS
-from repro.core.collectives import (
-    AxisEmbedding,
-    CollectiveCostModel,
     TorusFabric,
     assign_axes,
+    avoidable_contention_ratio,
     best_slice_geometry,
     ring_all_gather_time,
     ring_all_reduce_time,
+    simulate_queue,
     slice_fabric,
     worst_slice_geometry,
 )

@@ -116,7 +116,7 @@ def test_table5_hypothetical_machines():
 def test_paper_intro_example_6_midplane_system():
     """Section 2 example: 3x2x1x1 system, best 1536-node partition is
     12x4x4x4x2 with 256 links; the 8x6x4x4x2 alternative would have 384."""
-    from repro.core.torus import Torus
+    from repro.network import Torus
 
     part = Torus((12, 4, 4, 4, 2))
     assert part.num_vertices == 1536

@@ -6,7 +6,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.bgq import node_dims_of_midplane_geometry as node_dims
-from repro.core.contention import (
+from repro.network import (
     LinkLoads,
     all_to_all_max_load,
     furthest_offset,

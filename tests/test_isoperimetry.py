@@ -7,8 +7,9 @@ import math
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.torus import Torus, ExplicitTorus, canonical, factorizations, volume
-from repro.core.isoperimetry import (
+from repro.network import Torus
+from repro.network.geometry import ExplicitTorus, canonical, factorizations, volume
+from repro.network.isoperimetry import (
     bollobas_leader_bound,
     theorem31_bound,
     lemma32_cut,
@@ -165,3 +166,59 @@ def test_small_set_expansion_monotone_nonincreasing():
     t = Torus((4, 4, 2))
     vals = [small_set_expansion(t, k) for k in (2, 4, 8, 16)]
     assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Regressions: the t > n/2 bound and the optimal/worst validation split.
+# ---------------------------------------------------------------------------
+def test_worst_cuboid_tightness_not_vacuous_above_half():
+    """Regression: for t > n/2 the bound must be the complement-symmetry
+    Theorem 3.1 bound, not the measured cut — the (3, 3, 2) cuboid of
+    (4, 4, 2) cuts 24 links against a bound of 16, so ``tight`` is False
+    (the historical code set bound = cut and reported the adversarial
+    geometry as isoperimetrically optimal)."""
+    t = Torus((4, 4, 2))
+    w = worst_cuboid(t, 18)  # n = 32, t > 16
+    assert w.geometry == (3, 3, 2) and w.cut == 24
+    assert w.bound == pytest.approx(theorem31_bound(t.dims, 32 - 18))
+    assert not w.tight
+
+
+def test_bound_above_half_uses_complement_symmetry():
+    t = Torus((4, 4, 2))
+    o = optimal_cuboid(t, 24)
+    # cut(S) == cut(S̄): the (4, 3, 2) cuboid's complement is the optimal
+    # 8-vertex cuboid, so the bound at n - t certifies it exactly.
+    assert o.geometry == (4, 3, 2) and o.cut == 16
+    assert o.bound == pytest.approx(theorem31_bound(t.dims, 8))
+    assert o.tight
+    full = optimal_cuboid(t, 32)  # the whole torus: cut 0, bound 0, tight
+    assert full.cut == 0 and full.bound == 0.0 and full.tight
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.integers(2, 5), min_size=1, max_size=3).map(tuple),
+    data=st.data(),
+)
+def test_property_cut_complement_symmetry_explicit(dims, data):
+    """cut(S) == cut(S̄) for arbitrary subsets — the identity behind the
+    t > n/2 bound."""
+    et = ExplicitTorus(dims)
+    verts = list(itertools.product(*(range(a) for a in dims)))
+    size = data.draw(st.integers(0, len(verts)))
+    perm = data.draw(st.permutations(verts))
+    subset = list(perm[:size])
+    complement = list(perm[size:])
+    assert et.cut(subset) == et.cut(complement)
+
+
+def test_optimal_and_worst_validation_aligned():
+    """Regression: worst_cuboid silently returned None for out-of-range t
+    while optimal_cuboid raised — both must raise now."""
+    t = Torus((4, 2))
+    for bad in (0, -3, 9):
+        with pytest.raises(ValueError):
+            optimal_cuboid(t, bad)
+        with pytest.raises(ValueError):
+            worst_cuboid(t, bad)

@@ -36,6 +36,7 @@ REPO = Path(__file__).resolve().parents[1]
 AUDITED_MODULES = [
     "repro.network.geometry",
     "repro.network.fabric",
+    "repro.network.isoperimetry",
     "repro.network.routing",
     "repro.network.patterns",
     "repro.network.netsim",
@@ -44,8 +45,9 @@ AUDITED_MODULES = [
     "repro.network.allocation",
     "repro.network.mapping",
 ]
-# TorusFabric + simulate_queue + map_ranks examples at minimum.
-MIN_DOCTEST_EXAMPLES = 8
+# TorusFabric + simulate_queue + map_ranks + the isoperimetry engine
+# (cut_table / optimal_cuboid / advise_partition) examples at minimum.
+MIN_DOCTEST_EXAMPLES = 12
 
 FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
 
