@@ -2,13 +2,28 @@
 
 Prints ``name,us_per_call,derived`` CSV (one row per benchmark), then the
 full row dumps.  Run: PYTHONPATH=src python -m benchmarks.run
+
+Options:
+
+* ``--only NAME`` (repeatable) — run just the named benchmark(s); unknown
+  names fail fast with the list of valid ones.
+* ``--check`` — validate previously emitted ``BENCH_*.json`` files
+  against their speedup gates (the ``BENCH_*_MIN_SPEEDUP`` environment
+  variables, default 10) without re-running anything; useful for
+  auditing CI artifacts.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
+from pathlib import Path
+
+from repro.utils.env import have_jax, set_platform
 
 from benchmarks.paper_tables import (
     fig3_pairing_mira,
@@ -19,6 +34,7 @@ from benchmarks.paper_tables import (
     tpu_slice_geometry,
 )
 from benchmarks.bench_allocation import allocation_microbench
+from benchmarks.bench_backend import backend_microbench
 from benchmarks.bench_isoperimetry import isoperimetry_microbench
 from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_netsim import netsim_microbench
@@ -40,16 +56,91 @@ BENCHMARKS = [
     ("mapping_microbench", mapping_microbench),
     ("netsim_microbench", netsim_microbench),
     ("isoperimetry_microbench", isoperimetry_microbench),
+    ("backend_microbench", backend_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]
 
+# Gated micro-benchmarks: emitted JSON file and the environment variable
+# that (optionally) relaxes the 10x acceptance bar — the registry --check
+# audits artifacts against.
+GATED = {
+    "routing_microbench": ("BENCH_routing.json", "BENCH_ROUTING_MIN_SPEEDUP"),
+    "allocation_microbench": ("BENCH_allocation.json", "BENCH_ALLOCATION_MIN_SPEEDUP"),
+    "mapping_microbench": ("BENCH_mapping.json", "BENCH_MAPPING_MIN_SPEEDUP"),
+    "netsim_microbench": ("BENCH_netsim.json", "BENCH_NETSIM_MIN_SPEEDUP"),
+    "isoperimetry_microbench": ("BENCH_isoperimetry.json", "BENCH_ISOPERIMETRY_MIN_SPEEDUP"),
+    "backend_microbench": ("BENCH_backend.json", "BENCH_BACKEND_MIN_SPEEDUP"),
+}
+
+
+def check_artifacts(search_dir: Path) -> int:
+    """Validate emitted ``BENCH_*.json`` files against their speedup gates
+    without re-running: every ``speedup`` field in every row must meet the
+    benchmark's ``BENCH_*_MIN_SPEEDUP`` (default 10).  Missing files are
+    reported but not fatal (a partial artifact set is auditable); a
+    present file below its gate is.  Returns the number of failures."""
+    failures = 0
+    for name, (fname, env_var) in sorted(GATED.items()):
+        gate = float(os.environ.get(env_var, "10"))
+        path = search_dir / fname
+        if not path.exists():
+            print(f"{name}: {fname} missing — skipped")
+            continue
+        data = json.loads(path.read_text())
+        speedups = [r["speedup"] for r in data.get("rows", []) if "speedup" in r]
+        if not speedups:
+            print(f"{name}: {fname} has no speedup rows — FAILED")
+            failures += 1
+            continue
+        worst = min(speedups)
+        ok = worst >= gate
+        print(f"{name}: worst speedup {worst:.1f}x vs gate {gate:g}x — "
+              f"{'ok' if ok else 'FAILED'}")
+        if not ok:
+            failures += 1
+    return failures
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--only", action="append", metavar="NAME",
+        help="run only the named benchmark (repeatable)",
+    )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="validate emitted BENCH_*.json files against their gates; runs nothing",
+    )
+    ap.add_argument(
+        "--check-dir", default=".", metavar="DIR",
+        help="directory holding the BENCH_*.json artifacts (default: cwd)",
+    )
+    args = ap.parse_args()
+
+    if args.check:
+        failures = check_artifacts(Path(args.check_dir))
+        if failures:
+            raise SystemExit(f"{failures} benchmark artifact(s) below gate")
+        return
+
+    if have_jax():
+        set_platform("cpu")  # keep timings off any stray accelerator
+
+    selected = BENCHMARKS
+    if args.only:
+        known = {name for name, _ in BENCHMARKS}
+        unknown = [n for n in args.only if n not in known]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark(s) {unknown}; valid: {sorted(known)}"
+            )
+        selected = [(n, fn) for n, fn in BENCHMARKS if n in set(args.only)]
+
     print("name,us_per_call,derived")
     details = []
     failed = []
-    for name, fn in BENCHMARKS:
+    for name, fn in selected:
         try:
             t0 = time.perf_counter()
             rows, derived = fn()

@@ -28,12 +28,29 @@ Single home of every geometry / fabric / routing primitive in the repo
   mapping     — topology-aware rank mapping inside a placement: strategy
                 catalogue (identity / axis-permutation / gray-snake /
                 greedy refinement) scored by congestion + dilation.
+  backend     — compiled (jax.jit) backends for the hot engines: DOR link
+                loads, the progressive-filling drain, the FFT contention
+                field, closed-form cut scoring, and the vmap-batched
+                candidate scorer; numpy stays the default + exact oracle.
 
 The historical
 ``repro.core.{torus,contention,collectives,allocation,isoperimetry}``
 modules re-export from here and are deprecated.
 """
 
+from .backend import (
+    BACKENDS,
+    HAVE_JAX,
+    DrainPlan,
+    drain,
+    drain_batch,
+    prepare_drain,
+    resolve_backend,
+    score_candidates,
+    xla_contention_field,
+    xla_cut_scores,
+    xla_route_loads,
+)
 from .geometry import (
     ExplicitTorus,
     Geometry,

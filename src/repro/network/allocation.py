@@ -106,13 +106,19 @@ class MachineState:
     the live placement table, and a lazily maintained background-traffic
     load tensor (the sum of every placement's pairing traffic routed on the
     machine torus) used by contention-scored allocation.
+
+    ``backend`` selects the compiled backend for the scored-allocation
+    contention fields (:func:`repro.network.placement.best_placement`);
+    the first-fit occupancy scans are integer windowed sums and always
+    run in NumPy (see DESIGN.md "Compiled backends").
     """
 
-    def __init__(self, dims: Sequence[int]):
+    def __init__(self, dims: Sequence[int], backend: Optional[str] = None):
         self.dims = tuple(int(d) for d in dims)
         self.grid = np.zeros(self.dims, dtype=bool)
         self.placements: Dict[int, Placement] = {}
         self._loads: Optional[np.ndarray] = None
+        self.backend = backend
 
     @property
     def free_units(self) -> int:
@@ -176,7 +182,7 @@ class MachineState:
     def allocate_scored(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
         """Contention/contact-scored allocation of one geometry."""
         cand: Optional[ScoredPlacement] = best_placement(
-            self.grid, geometry, self.traffic_loads()
+            self.grid, geometry, self.traffic_loads(), backend=self.backend
         )
         if cand is None:
             return None
@@ -483,6 +489,7 @@ def simulate_queue(
     contention: Optional[str] = None,
     mapping_pattern: Optional[str] = None,
     double_link_on_2: bool = True,
+    backend: Optional[str] = None,
 ) -> SimulationResult:
     """Online queue simulation with exact cuboid placement.
 
@@ -536,7 +543,9 @@ def simulate_queue(
     ``double_link_on_2`` is the machine's link convention for the mapping
     engine's congestion metric: True (default) models BG/Q's two parallel
     links on length-2 dimensions; TPU-style single-link fabrics pass
-    False.
+    False.  ``backend`` selects the compiled backend for the
+    ``"simulated"`` contention drains (identical schedules either way;
+    see :mod:`repro.network.backend`).
 
     Example (two 4-midplane jobs on a tiny torus, FCFS, no backfill):
 
@@ -644,7 +653,10 @@ def simulate_queue(
                         np.concatenate([t[2] for t in triples]),
                     )
                     sim = simulate_flows(
-                        paths, link_bw=link_bw, double_link_on_2=double_link_on_2
+                        paths,
+                        link_bw=link_bw,
+                        double_link_on_2=double_link_on_2,
+                        backend=backend,
                     )
                     simulated_comm_time = float(sim.completion[n_bg:].max())
                 else:

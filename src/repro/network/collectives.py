@@ -157,6 +157,7 @@ def simulated_ring_all_reduce_time(
     bytes_in: float,
     link_bw: float = 1.0,
     double_link_on_2: bool = False,
+    backend: Optional[str] = None,
 ) -> float:
     """Dynamic cross-check of :func:`ring_all_reduce_time`.
 
@@ -173,7 +174,11 @@ def simulated_ring_all_reduce_time(
 
     phases = ring_all_reduce_phases(dims, axis, bytes_in)
     return simulate_phases(
-        dims, phases, link_bw=link_bw, double_link_on_2=double_link_on_2
+        dims,
+        phases,
+        link_bw=link_bw,
+        double_link_on_2=double_link_on_2,
+        backend=backend,
     ).total_time
 
 

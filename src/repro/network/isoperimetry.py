@@ -44,6 +44,7 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import resolve_backend
 from .geometry import (
     Geometry,
     canonical,
@@ -159,7 +160,7 @@ class CutTable:
         return self.geometry(i), int(self.cuts[i])
 
 
-def cut_table(torus_or_dims, t: int) -> CutTable:
+def cut_table(torus_or_dims, t: int, backend: Optional[str] = None) -> CutTable:
     """Batched exact cuts of *all* cuboid geometries of volume ``t``.
 
     One divisor-meshgrid enumeration of every aligned embedding, one
@@ -168,6 +169,9 @@ def cut_table(torus_or_dims, t: int) -> CutTable:
     group-by-canonical-geometry minimisation — no per-cuboid Python loop.
     The per-geometry values equal :func:`repro.network.geometry.cuboid_cut`
     exactly (property-pinned against the reference oracle).
+    ``backend="xla"`` evaluates the closed-form cut scores in the compiled
+    backend (int64 arithmetic — identical values); the divisor enumeration
+    and group-by stay host-side.
 
     >>> cut_table((4, 4, 2), 8).items()
     [((2, 2, 2), 16), ((4, 2, 1), 16)]
@@ -179,7 +183,12 @@ def cut_table(torus_or_dims, t: int) -> CutTable:
     if S.shape[0] == 0:
         return CutTable(a, t, S.reshape(0, len(a)), np.zeros(0, dtype=np.int64))
     av = np.array(a, dtype=np.int64)
-    cuts = np.where(S == av[None, :], 0, (2 * t) // S).sum(axis=1)
+    if resolve_backend(backend) == "xla":
+        from .backend import xla_cut_scores
+
+        cuts = xla_cut_scores(a, S, t)
+    else:
+        cuts = np.where(S == av[None, :], 0, (2 * t) // S).sum(axis=1)
     G = -np.sort(-S, axis=1)  # canonical (descending) rows
     # Group by geometry via a positional integer key (base max(a)+1): a 1-D
     # unique on int64 keys, much cheaper than np.unique(axis=0)'s row-view
@@ -584,6 +593,7 @@ def advise_partition(
     *,
     unit_node_dims: Optional[Sequence[int]] = None,
     simulate: bool = False,
+    backend: Optional[str] = None,
 ) -> PartitionAdvice:
     """Advise one job size: current (or worst, when None) vs optimal geometry.
 
@@ -627,8 +637,12 @@ def advise_partition(
         from .netsim import simulate_traffic
         from .patterns import bisection_pairing
 
-        t_cur = simulate_traffic(nd_cur, bisection_pairing(nd_cur)).makespan
-        t_opt = simulate_traffic(nd_opt, bisection_pairing(nd_opt)).makespan
+        t_cur = simulate_traffic(
+            nd_cur, bisection_pairing(nd_cur), backend=backend
+        ).makespan
+        t_opt = simulate_traffic(
+            nd_opt, bisection_pairing(nd_opt), backend=backend
+        ).makespan
         simulated = t_cur / t_opt
     n_nodes = volume(nd_opt)
     return PartitionAdvice(
@@ -650,6 +664,7 @@ def advise_policy_table(
     unit_node_dims: Optional[Sequence[int]] = None,
     simulate: bool = False,
     sizes: Optional[Sequence[int]] = None,
+    backend: Optional[str] = None,
 ) -> List[PartitionAdvice]:
     """Advise every size of an allocation policy's admissible geometry table
     (e.g. Mira's scheduler partition list from :mod:`repro.core.bgq`):
@@ -662,6 +677,7 @@ def advise_policy_table(
             policy_table[size],
             unit_node_dims=unit_node_dims,
             simulate=simulate,
+            backend=backend,
         )
         for size in chosen
     ]

@@ -57,6 +57,7 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import resolve_backend
 from .geometry import volume
 from .routing import max_link_load, route_dor
 
@@ -193,6 +194,7 @@ def score_mapping(
     traffic: RankTraffic,
     split_ties: bool = True,
     double_link_on_2: bool = True,
+    backend: Optional[str] = None,
 ) -> MappingScore:
     """Score one mapping: route the rank traffic on the machine torus with
     the vectorized DOR engine and reduce to (congestion, dilation).
@@ -209,7 +211,7 @@ def score_mapping(
         return MappingScore(0.0, 0.0)
     src = coords[rsrc]
     dst = coords[rdst]
-    loads = route_dor(dims, src, dst, vol, split_ties=split_ties)
+    loads = route_dor(dims, src, dst, vol, split_ties=split_ties, backend=backend)
     congestion = max_link_load(dims, loads, double_link_on_2)
     dilation = float((np.asarray(vol) * toroidal_hops(dims, src, dst)).sum())
     return MappingScore(congestion, dilation)
@@ -315,6 +317,7 @@ def greedy_refine(
     double_link_on_2: bool = True,
     max_rounds: int = 3,
     max_ranks: int = 12,
+    backend: Optional[str] = None,
 ) -> Tuple[np.ndarray, MappingScore, bool]:
     """Steepest-descent rank-swap refinement of a seed mapping.
 
@@ -326,17 +329,23 @@ def greedy_refine(
     re-routed — so one round is O(max_ranks^2 * (N + m_inc)), not a full
     re-score per candidate.  Deterministic; returns
     ``(coords, score, improved)``.
+
+    ``backend`` applies to the full-pattern route and the final re-score;
+    the inner delta updates are small irregular calls that always run in
+    NumPy (dispatch overhead would dominate — see DESIGN.md).
     """
     dims = tuple(int(a) for a in dims)
     rsrc, rdst, vol = traffic
     coords = np.array(coords, dtype=np.int64)
     if rsrc.shape[0] == 0 or coords.shape[0] < 2:
         return coords, score_mapping(
-            dims, coords, traffic, split_ties, double_link_on_2
+            dims, coords, traffic, split_ties, double_link_on_2, backend=backend
         ), False
 
     vol = np.asarray(vol, dtype=np.float64)
-    loads = route_dor(dims, coords[rsrc], coords[rdst], vol, split_ties=split_ties)
+    loads = route_dor(
+        dims, coords[rsrc], coords[rdst], vol, split_ties=split_ties, backend=backend
+    )
     hops = toroidal_hops(dims, coords[rsrc], coords[rdst])
     score = MappingScore(
         max_link_load(dims, loads, double_link_on_2),
@@ -384,7 +393,9 @@ def greedy_refine(
         coords[[i, j]] = coords[[j, i]]
         improved_any = True
     # Re-score from scratch: the delta-updated tensor carries float noise.
-    final = score_mapping(dims, coords, traffic, split_ties, double_link_on_2)
+    final = score_mapping(
+        dims, coords, traffic, split_ties, double_link_on_2, backend=backend
+    )
     return coords, final, improved_any
 
 
@@ -464,6 +475,7 @@ def map_ranks(
     double_link_on_2: bool = True,
     refine: bool = True,
     wrap: Optional[Sequence[bool]] = None,
+    backend: Optional[str] = None,
 ) -> RankMapping:
     """Choose the best rank->cell embedding for a placed cuboid.
 
@@ -483,6 +495,10 @@ def map_ranks(
     wrap-around link (default: all) — it does not change the DOR-torus
     congestion/dilation scores, but flows to :func:`mesh_axis_hops` so the
     collective pricing never assumes a wrap link that is not there.
+    ``backend="xla"`` scores the whole strategy catalogue in one
+    ``vmap``-batched compiled call (:func:`repro.network.backend.score_candidates`) —
+    scores are exactly those of the sequential loop, so the chosen
+    strategy is identical.
 
     Example — a logical (8, 2) halo grid laid across a (2, 8) slice of a
     (4, 8) torus: row-major rank order folds the logical 8-ring onto the
@@ -518,28 +534,46 @@ def map_ranks(
     else:
         pattern = "explicit"
 
-    def _score(coords: np.ndarray) -> MappingScore:
-        return score_mapping(dims, coords, traffic, split_ties, double_link_on_2)
-
     ident = identity_mapping(dims, oriented, offset)
-    identity_score = _score(ident)
-
-    candidates: List[Tuple[str, np.ndarray, MappingScore]] = [
-        ("identity", ident, identity_score)
-    ]
+    cand_list: List[Tuple[str, np.ndarray]] = [("identity", ident)]
     for perm, rev in axis_permutation_orders(oriented):
         if all(p == i for i, p in enumerate(perm)) and not any(rev):
             continue  # the identity enumeration, already scored
         coords = axis_order_coords(dims, oriented, offset, perm, rev)
-        candidates.append(("axis-permutation", coords, _score(coords)))
+        cand_list.append(("axis-permutation", coords))
     snake = snake_mapping(dims, oriented, offset)
-    candidates.append(("gray-snake", snake, _score(snake)))
+    cand_list.append(("gray-snake", snake))
+
+    if resolve_backend(backend) == "xla" and traffic[0].shape[0]:
+        # One vmap-batched compiled call over the whole strategy catalogue;
+        # scores are row-identical to the sequential loop (property-pinned),
+        # so the lexicographic winner cannot change.
+        from .backend import score_candidates
+
+        cong, dil = score_candidates(
+            dims,
+            np.stack([c for _, c in cand_list]),
+            traffic,
+            split_ties,
+            double_link_on_2,
+            backend="xla",
+        )
+        candidates = [
+            (name, c, MappingScore(float(cg), float(dl)))
+            for (name, c), cg, dl in zip(cand_list, cong, dil)
+        ]
+    else:
+        candidates = [
+            (name, c, score_mapping(dims, c, traffic, split_ties, double_link_on_2))
+            for name, c in cand_list
+        ]
+    identity_score = candidates[0][2]
 
     best = min(candidates, key=lambda t: t[2].key())
     strategy, coords, score = best
     if refine:
         refined, rscore, improved = greedy_refine(
-            dims, coords, traffic, split_ties, double_link_on_2
+            dims, coords, traffic, split_ties, double_link_on_2, backend=backend
         )
         if improved and rscore.key() < score.key():
             strategy, coords, score = f"greedy({strategy})", refined, rscore

@@ -67,6 +67,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import resolve_backend
 from .geometry import volume
 from .routing import max_link_load
 
@@ -525,12 +526,45 @@ class FlowSimResult:
         return self.makespan / self.ideal_time
 
 
+def _package_result(
+    paths: FlowPaths,
+    flow_completion: np.ndarray,
+    steps: int,
+    timeline: List[UtilizationSample],
+    link_bw: float,
+) -> FlowSimResult:
+    """Assemble a :class:`FlowSimResult` from per-subflow finish times —
+    shared tail of the numpy and xla simulation paths."""
+    F = paths.n_flows
+    vol = paths.vol
+    completion = np.zeros(paths.n_messages)
+    if F:
+        np.maximum.at(completion, paths.msg, flow_completion)
+    msg_vol = (
+        np.bincount(paths.msg, weights=vol, minlength=paths.n_messages)
+        if F
+        else np.zeros(paths.n_messages)
+    )
+    return FlowSimResult(
+        dims=paths.dims,
+        mode=paths.mode,
+        completion=completion,
+        flow_completion=flow_completion,
+        makespan=float(flow_completion.max()) if F else 0.0,
+        steps=steps,
+        ideal_time=float(msg_vol.max()) / link_bw if msg_vol.shape[0] else 0.0,
+        link_loads=paths.link_loads(),
+        timeline=timeline,
+    )
+
+
 def simulate_flows(
     paths: FlowPaths,
     link_bw: float = 1.0,
     double_link_on_2: bool = True,
     record_utilization: bool = False,
     max_steps: int = 100_000,
+    backend: Optional[str] = None,
 ) -> FlowSimResult:
     """Drain a routed pattern under max-min fair link sharing.
 
@@ -543,9 +577,25 @@ def simulate_flows(
     link-utilization timeline (stats plus the full per-link tensor) —
     off by default, since the extra per-step sweep is pure overhead for
     callers that only need completion times.
+
+    ``backend="xla"`` drains through the compiled fixed-shape simulator
+    (:mod:`repro.network.backend`): same completion order, makespans
+    within 1e-9 relative of the numpy engine.  The timeline sweep is a
+    host-side diagnostic, so ``record_utilization=True`` is numpy-only.
     """
     if link_bw <= 0.0:
         raise ValueError("link_bw must be positive")
+    if resolve_backend(backend) == "xla":
+        if record_utilization:
+            raise ValueError(
+                "record_utilization is a numpy-only diagnostic; "
+                "use backend='numpy' to capture the timeline"
+            )
+        from .backend import drain, prepare_drain
+
+        plan = prepare_drain(paths, link_bw, double_link_on_2)
+        flow_completion, steps = drain(plan, max_steps=max_steps)
+        return _package_result(paths, flow_completion, steps, [], link_bw)
     dims = paths.dims
     F = paths.n_flows
     vol = paths.vol
@@ -594,25 +644,7 @@ def simulate_flows(
                 )
             )
 
-    completion = np.zeros(paths.n_messages)
-    if F:
-        np.maximum.at(completion, paths.msg, flow_completion)
-    msg_vol = (
-        np.bincount(paths.msg, weights=vol, minlength=paths.n_messages)
-        if F
-        else np.zeros(paths.n_messages)
-    )
-    return FlowSimResult(
-        dims=dims,
-        mode=paths.mode,
-        completion=completion,
-        flow_completion=flow_completion,
-        makespan=float(flow_completion.max()) if F else 0.0,
-        steps=steps,
-        ideal_time=float(msg_vol.max()) / link_bw if msg_vol.shape[0] else 0.0,
-        link_loads=paths.link_loads(),
-        timeline=timeline,
-    )
+    return _package_result(paths, flow_completion, steps, timeline, link_bw)
 
 
 def simulate_traffic(
@@ -623,6 +655,7 @@ def simulate_traffic(
     link_bw: float = 1.0,
     double_link_on_2: bool = True,
     record_utilization: bool = False,
+    backend: Optional[str] = None,
 ) -> FlowSimResult:
     """Route and drain a ``(src, dst, vol)`` pattern in one call."""
     paths = build_paths(dims, traffic, mode=mode, split_ties=split_ties)
@@ -631,6 +664,7 @@ def simulate_traffic(
         link_bw=link_bw,
         double_link_on_2=double_link_on_2,
         record_utilization=record_utilization,
+        backend=backend,
     )
 
 
@@ -680,6 +714,7 @@ def validate_prediction(
     split_ties: bool = True,
     double_link_on_2: bool = True,
     rtol: float = 1e-6,
+    backend: Optional[str] = None,
 ) -> PredictionValidation:
     """Run the paper's §7 validation experiment for one pattern.
 
@@ -694,7 +729,9 @@ def validate_prediction(
     dims = tuple(int(a) for a in dims)
     paths = dor_paths(dims, traffic[0], traffic[1], traffic[2], split_ties=split_ties)
     predicted = paths.max_link_load(double_link_on_2) / link_bw
-    res = simulate_flows(paths, link_bw=link_bw, double_link_on_2=double_link_on_2)
+    res = simulate_flows(
+        paths, link_bw=link_bw, double_link_on_2=double_link_on_2, backend=backend
+    )
     return PredictionValidation(
         dims=dims,
         predicted_time=predicted,
@@ -722,6 +759,7 @@ def simulate_phases(
     split_ties: bool = True,
     link_bw: float = 1.0,
     double_link_on_2: bool = True,
+    backend: Optional[str] = None,
 ) -> PhasedSimResult:
     """Simulate a sequence of dependent communication phases.
 
@@ -748,6 +786,7 @@ def simulate_phases(
                 split_ties=split_ties,
                 link_bw=link_bw,
                 double_link_on_2=double_link_on_2,
+                backend=backend,
             )
             memo[key] = res
         results.append(res)
@@ -782,6 +821,7 @@ def compare_routing(
     split_ties: bool = True,
     link_bw: float = 1.0,
     double_link_on_2: bool = True,
+    backend: Optional[str] = None,
 ) -> RoutingComparison:
     """Quantify how much of a pattern's contention routing alone recovers.
 
@@ -794,11 +834,11 @@ def compare_routing(
     dims = tuple(int(a) for a in dims)
     t_dor = simulate_traffic(
         dims, traffic, mode="dor", split_ties=split_ties,
-        link_bw=link_bw, double_link_on_2=double_link_on_2,
+        link_bw=link_bw, double_link_on_2=double_link_on_2, backend=backend,
     ).makespan
     t_adp = simulate_traffic(
         dims, traffic, mode="adaptive", split_ties=split_ties,
-        link_bw=link_bw, double_link_on_2=double_link_on_2,
+        link_bw=link_bw, double_link_on_2=double_link_on_2, backend=backend,
     ).makespan
     return RoutingComparison(dims=dims, dor_makespan=t_dor, adaptive_makespan=t_adp)
 

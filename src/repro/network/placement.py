@@ -54,6 +54,7 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import resolve_backend
 from .geometry import Geometry, bisection_links, canonical
 
 Coord = Tuple[int, ...]
@@ -381,6 +382,7 @@ def contention_field(
     oriented: Sequence[int],
     mask: np.ndarray,
     mask_ffts: Optional[List[List[Optional[np.ndarray]]]] = None,
+    backend: Optional[str] = None,
 ) -> np.ndarray:
     """Predicted interference for *every* offset of an orientation in one
     shot: the job's traffic volume over masked links
@@ -397,8 +399,17 @@ def contention_field(
     the pre-commit grid, so its internal links never self-count.  Values
     carry FFT round-off (~1e-12); rank with a tolerance
     (:func:`best_placement` rounds to 9 decimals).
+
+    ``backend="xla"`` computes all (dimension, direction) planes in one
+    compiled batched FFT (``mask_ffts`` is ignored there — the compiled
+    path transforms the mask in the same call); both backends agree to
+    FFT round-off, below the 9-decimal ranking tolerance.
     """
     dims = tuple(int(a) for a in dims)
+    if resolve_backend(backend) == "xla":
+        from .backend import xla_contention_field
+
+        return xla_contention_field(dims, tuple(oriented), mask)
     if mask_ffts is None:
         mask_ffts = _mask_plane_ffts(mask)
     J = base_loads(dims, tuple(oriented))
@@ -418,6 +429,7 @@ def best_placement(
     grid: np.ndarray,
     geometry: Sequence[int],
     background_loads: Optional[np.ndarray] = None,
+    backend: Optional[str] = None,
 ) -> Optional[ScoredPlacement]:
     """Scored placement of one geometry: among all free translates of all
     orientations, minimise predicted interference (the job's all-to-all
@@ -452,7 +464,9 @@ def best_placement(
             continue
         contact = shell_contact(grid, perm).ravel(order="C")[flat]
         if have_bg:
-            cont = contention_field(dims, perm, mask, mask_ffts).ravel(order="C")[flat]
+            cont = contention_field(
+                dims, perm, mask, mask_ffts, backend=backend
+            ).ravel(order="C")[flat]
         else:
             cont = np.zeros(flat.shape[0])
         rank_contact = contact if use_contact else np.zeros_like(contact)

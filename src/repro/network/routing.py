@@ -43,6 +43,7 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import resolve_backend
 from .geometry import canonical, volume
 from .fabric import Torus
 
@@ -71,6 +72,7 @@ def route_dor(
     dst: np.ndarray,
     vol: np.ndarray,
     split_ties: bool = True,
+    backend: Optional[str] = None,
 ) -> np.ndarray:
     """Per-directed-link loads for a batch of messages under DOR routing.
 
@@ -80,6 +82,9 @@ def route_dor(
     src, dst : int arrays of shape (M, D) — message endpoints
     vol : float array of shape (M,) (or scalar) — message volumes
     split_ties : split exactly-antipodal ring traffic across both directions
+    backend : ``"numpy"`` (default) or ``"xla"`` — see
+        :func:`repro.network.backend.resolve_backend`; both produce the
+        identical load tensor (exactly, for integer/dyadic volumes)
 
     Returns
     -------
@@ -99,6 +104,10 @@ def route_dor(
     loads = np.zeros((D, 2) + dims, dtype=np.float64)
     if M == 0:
         return loads
+    if resolve_backend(backend) == "xla":
+        from .backend import xla_route_loads
+
+        return xla_route_loads(dims, src, dst, vol, split_ties)
 
     for k, a in enumerate(dims):
         if a == 1:

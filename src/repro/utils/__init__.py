@@ -1,0 +1,21 @@
+"""repro.utils — small cross-cutting helpers.
+
+``repro.utils.env`` configures the jax computation environment (x64
+precision, platform, host device count) for the compiled network backends
+and the kernel layers; nothing here imports jax at module scope, so the
+package stays importable on numpy-only installs.
+"""
+
+from .env import (
+    have_jax,
+    jax_enable_x64,
+    set_host_device_count,
+    set_platform,
+)
+
+__all__ = [
+    "have_jax",
+    "jax_enable_x64",
+    "set_host_device_count",
+    "set_platform",
+]

@@ -1,0 +1,84 @@
+"""Computation-environment configuration for the jax-backed layers.
+
+The compiled network backends (:mod:`repro.network.backend`) and the
+kernel/roofline layers share two environment concerns:
+
+* **Precision** — the network engines are exact in float64/int64, so any
+  jit-compiled port must run under ``jax_enable_x64``; a silent fall back
+  to float32 would turn exact link-load identities into approximations.
+* **Topology** — tests and benchmarks sometimes want a specific platform
+  (``cpu``) or a multi-device host (``--xla_force_host_platform_device_count``)
+  regardless of what hardware jax detects.
+
+All helpers degrade gracefully: importing this module never imports jax,
+and each setter raises ``RuntimeError`` with a clear message when jax is
+missing rather than an opaque ``ImportError`` deep inside a backend.
+
+>>> have_jax() in (True, False)
+True
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+
+
+def have_jax() -> bool:
+    """Whether jax is importable in this environment (spec lookup only —
+    does not import jax, so calling this is always cheap and safe)."""
+    return importlib.util.find_spec("jax") is not None
+
+
+def _require_jax():
+    if not have_jax():
+        raise RuntimeError(
+            "jax is not installed; install jax[cpu] or use the numpy backend"
+        )
+    import jax
+
+    return jax
+
+
+def jax_enable_x64(enable: bool = True) -> None:
+    """Set jax's default array precision to 64-bit (or back to 32).
+
+    With ``enable=False`` the ``JAX_ENABLE_X64`` environment variable is
+    consulted before switching off, matching the upstream convention that
+    the environment wins over a programmatic opt-out.  The flag is
+    process-global; the compiled network backends call this on first use
+    because their exactness contracts (integer link loads, int64 cut
+    arithmetic) require 64-bit types.
+    """
+    if not enable:
+        enable = bool(os.getenv("JAX_ENABLE_X64", 0))
+    _require_jax().config.update("jax_enable_x64", bool(enable))
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin jax to one platform (``cpu``, ``gpu`` or ``tpu``).
+
+    Only takes effect before jax initialises its backends — call it at
+    program start (benchmarks do, so timing never silently lands on an
+    accelerator with different float semantics).
+    """
+    _require_jax().config.update("jax_platform_name", platform)
+
+
+def set_host_device_count(n: int) -> None:
+    """Force the host CPU platform to expose ``n`` devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+
+    Must run before jax initialises; existing unrelated ``XLA_FLAGS``
+    content is preserved.  Useful for exercising multi-device mesh code
+    paths on a single machine.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
+    flags = os.environ.get("XLA_FLAGS", "")
+    parts = [
+        f for f in flags.split() if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    parts.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(parts)

@@ -44,6 +44,8 @@ AUDITED_MODULES = [
     "repro.network.placement",
     "repro.network.allocation",
     "repro.network.mapping",
+    "repro.network.backend",
+    "repro.utils.env",
 ]
 # TorusFabric + simulate_queue + map_ranks + the isoperimetry engine
 # (cut_table / optimal_cuboid / advise_partition) examples at minimum.
