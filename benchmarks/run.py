@@ -39,6 +39,7 @@ from benchmarks.bench_isoperimetry import isoperimetry_microbench
 from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_netsim import netsim_microbench
 from benchmarks.bench_routing import routing_microbench
+from benchmarks.bench_scheduler import scheduler_microbench
 from benchmarks.matmul_scaling import fig5_matmul, fig6_strong_scaling
 from benchmarks.roofline_report import dryrun_matrix, roofline_table
 
@@ -57,6 +58,7 @@ BENCHMARKS = [
     ("netsim_microbench", netsim_microbench),
     ("isoperimetry_microbench", isoperimetry_microbench),
     ("backend_microbench", backend_microbench),
+    ("scheduler_microbench", scheduler_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]
@@ -71,6 +73,7 @@ GATED = {
     "netsim_microbench": ("BENCH_netsim.json", "BENCH_NETSIM_MIN_SPEEDUP"),
     "isoperimetry_microbench": ("BENCH_isoperimetry.json", "BENCH_ISOPERIMETRY_MIN_SPEEDUP"),
     "backend_microbench": ("BENCH_backend.json", "BENCH_BACKEND_MIN_SPEEDUP"),
+    "scheduler_microbench": ("BENCH_scheduler.json", "BENCH_SCHEDULER_MIN_SPEEDUP"),
 }
 
 

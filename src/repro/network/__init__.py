@@ -25,6 +25,14 @@ Single home of every geometry / fabric / routing primitive in the repo
                 circular windowed sums, contention/contact scoring.
   allocation  — partition allocation policies and the online queue
                 simulator (arrival streams, EASY backfill).
+  scheduler   — event-sourced scheduler service over the allocation
+                engine: append-only event log (Arrival/Start/Complete/
+                Fail/Preempt/Reclaim), deterministic (time, kind, seq)
+                ordering with a scale-aware clock tolerance, priority
+                queues with preemption/reclaim, failure evacuation wired
+                to runtime/fault_tolerance, backpressure shedding, and a
+                seeded scenario generator; simulate_queue is a thin batch
+                driver over it.
   mapping     — topology-aware rank mapping inside a placement: strategy
                 catalogue (identity / axis-permutation / gray-snake /
                 greedy refinement) scored by congestion + dilation.
@@ -199,4 +207,16 @@ from .allocation import (
     SimulationResult,
     avoidable_contention_ratio,
     simulate_queue,
+)
+from .scheduler import (
+    Event,
+    Scenario,
+    SchedulerService,
+    apply_monitor_failures,
+    generate_scenario,
+    replay_events,
+    run_scenario,
+    scheduler_throughput,
+    time_close,
+    time_eps,
 )

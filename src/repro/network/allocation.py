@@ -44,21 +44,20 @@ grid).
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .geometry import Geometry, bisection_links, canonical, sub_cuboids
-from .isoperimetry import best_bisection_geometry, ranked_geometries, scaled_node_dims
+from .isoperimetry import ranked_geometries, scaled_node_dims
 from .mapping import RankMapping, map_ranks
 from .netsim import dor_paths, simulate_flows
 from .placement import (
     ScoredPlacement,
     best_placement,
     first_fit,
+    int_placement_loads,
     pad_geometry,
     placement_all_to_all_traffic,
     placement_cells,
@@ -117,7 +116,13 @@ class MachineState:
         self.dims = tuple(int(d) for d in dims)
         self.grid = np.zeros(self.dims, dtype=bool)
         self.placements: Dict[int, Placement] = {}
-        self._loads: Optional[np.ndarray] = None
+        # Exact accumulator: per placement size n, the int64 sum of the
+        # live placements' integer-scaled load fields (value 2·n·load, see
+        # placement.int_base_loads).  Integer add/subtract is lossless, so
+        # release subtracts a placement back out bit-exactly instead of
+        # discarding the cache and re-correlating every live job.
+        self._int_loads: Dict[int, np.ndarray] = {}
+        self._loads: Optional[np.ndarray] = None  # lazy float recombination
         self.backend = backend
 
     @property
@@ -134,15 +139,46 @@ class MachineState:
         machine (the historical scan silently truncated it)."""
         return first_fit(self.grid, geometry)
 
-    def traffic_loads(self) -> np.ndarray:
+    def _recombine(
+        self,
+        exclude_size: Optional[int] = None,
+        exclude_field: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        total = np.zeros((len(self.dims), 2) + self.dims)
+        for n in sorted(self._int_loads):
+            acc = self._int_loads[n]
+            if n == exclude_size:
+                acc = acc - exclude_field
+            total += acc / (2.0 * n)
+        return total
+
+    def traffic_loads(self, exclude: Optional[int] = None) -> np.ndarray:
         """(D, 2, *dims) link loads of all current placements' intra-job
         all-to-all traffic on the machine torus (the scored policies'
-        background; see :func:`repro.network.placement.placement_loads`)."""
+        background; see :func:`repro.network.placement.placement_loads`).
+
+        Maintained *exactly*: commits add and releases subtract each
+        placement's integer-scaled field
+        (:func:`repro.network.placement.int_base_loads`) in int64, and
+        this recombines the per-size sums as ``Σ_n S_n / (2n)`` — each
+        int64 value converts to float without rounding (they stay far
+        below 2**53), so the background after any alloc/release stream is
+        bit-identical to a fresh recompute over the surviving placements
+        (property-pinned) with no O(live jobs × grid) rebuild on release.
+
+        ``exclude`` removes one live job's own field before recombining —
+        again in the integer domain, hence exactly — which is the measured
+        -contention background of that job (callers previously subtracted
+        the float field after the fact and relied on the residue staying
+        under the sharing threshold)."""
+        if exclude is not None:
+            p = self.placements[exclude]
+            return self._recombine(
+                int(np.prod(p.oriented)),
+                int_placement_loads(self.dims, p.oriented, p.offset),
+            )
         if self._loads is None:
-            total = np.zeros((len(self.dims), 2) + self.dims)
-            for p in self.placements.values():
-                total += placement_loads(self.dims, p.oriented, p.offset)
-            self._loads = total
+            self._loads = self._recombine()
         return self._loads
 
     def _commit(
@@ -167,8 +203,15 @@ class MachineState:
             predicted_contention=predicted_contention,
         )
         self.placements[job_id] = p
-        if self._loads is not None:
-            self._loads = self._loads + placement_loads(self.dims, oriented, offset)
+        n = int(np.prod(oriented))
+        delta = int_placement_loads(self.dims, oriented, offset)
+        if delta.any():  # single-cell placements route no traffic
+            acc = self._int_loads.get(n)
+            if acc is None:
+                self._int_loads[n] = np.array(delta)  # cached field is read-only
+            else:
+                acc += delta
+        self._loads = None  # recombined lazily (exact, O(sizes · grid))
         return p
 
     def allocate(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
@@ -226,9 +269,22 @@ class MachineState:
         )
 
     def release(self, job_id: int) -> None:
+        """Free the job's cells and subtract its traffic field *exactly*
+        (int64 accumulators — see :meth:`traffic_loads`), so the next
+        scored allocation recombines a handful of per-size tensors instead
+        of re-routing every live placement."""
         p = self.placements.pop(job_id)
         self.grid[self.cells(p.oriented, p.offset)] = False
-        self._loads = None  # recompute lazily; subtraction would drift
+        delta = int_placement_loads(self.dims, p.oriented, p.offset)
+        if delta.any():
+            n = int(np.prod(p.oriented))
+            acc = self._int_loads[n]
+            acc -= delta
+            if not acc.any():
+                # Nonnegative fields: a zero sum means every commit of this
+                # size has been released — drop the bucket.
+                del self._int_loads[n]
+        self._loads = None  # recombined lazily (exact, O(sizes · grid))
 
 
 # ---------------------------------------------------------------------------
@@ -451,30 +507,12 @@ class SimulationResult:
         return float(np.mean([j.bisection_efficiency for j in self.jobs]))
 
 
+# Traffic-sharing threshold of the measured-contention proxy (a load
+# magnitude, not a time): a link is "shared" when the background carries
+# more than this.  The event *clock* no longer uses a fixed epsilon — the
+# scheduler service's scale-aware time_eps owns simultaneity (see
+# repro.network.scheduler).
 _EPS = 1e-12
-
-
-def _reservation_time(
-    machine: MachineState,
-    prefs: List[Geometry],
-    running: List[Tuple[float, int, ScheduledJob]],
-    now: float,
-) -> Optional[float]:
-    """Earliest time the blocked request is guaranteed to fit: replay the
-    running jobs' completions (in end order) on a scratch grid until some
-    preferred geometry has a free translate.  None: never fits (not even on
-    an empty machine) — the request is impossible."""
-    if not prefs:
-        return None
-    scratch = machine.grid.copy()
-    for end, _, job in sorted(running):
-        p = job.placement
-        scratch[placement_cells(machine.dims, p.oriented, p.offset)] = False
-        if any(first_fit(scratch, g) is not None for g in prefs):
-            return end
-    if any(first_fit(scratch, g) is not None for g in prefs):
-        return now  # defensive: the caller only asks after a failed allocate
-    return None
 
 
 def simulate_queue(
@@ -497,7 +535,13 @@ def simulate_queue(
     reproduce the historical FCFS batch semantics), are served head-of-line
     FCFS, and with ``backfill=True`` a later job may start while the head is
     blocked provided it completes before the head's reservation — EASY
-    backfill, so the head is never delayed by a backfilled job.
+    backfill, so the head is never delayed by a backfilled job.  The event
+    loop itself lives in :class:`repro.network.scheduler.SchedulerService`
+    — this function is a thin batch driver over the service (submit the
+    sorted stream, run to quiescence, return the result), so simultaneity
+    follows the service's deterministic ``(time, kind, seq)`` ordering
+    with a scale-aware tolerance rather than the historical fixed
+    ``1e-12``.
 
     A request is rejected only if it cannot be placed even on an empty
     machine (impossible geometry/size for this torus).
@@ -565,14 +609,13 @@ def simulate_queue(
         raise ValueError(
             "mapping_pattern requires measure_contention=True (or contention=)"
         )
-    machine = MachineState(machine_dims)
-    result = SimulationResult(policy=policy.name)
-    order = sorted(enumerate(jobs), key=lambda t: (t[1].arrival, t[0]))
-    arrivals = deque(req for _, req in order)
-    waiting: List[JobRequest] = []
-    running: List[Tuple[float, int, ScheduledJob]] = []  # heap by (end, seq)
-    seq = 0
-    now = 0.0
+    # One event loop, not two: the batch simulation is a thin driver over
+    # the event-sourced service (repro.network.scheduler) — jobs are
+    # submitted in (arrival, submission-index) order and the contention
+    # measurements ride on the service's start/release hooks.
+    from .scheduler import SchedulerService
+
+    dims = tuple(int(d) for d in machine_dims)
 
     # Live per-job *mapped* loads (mapping_pattern only): the measured
     # shared-link background under a mapping is the running sum of these,
@@ -582,159 +625,90 @@ def simulate_queue(
     # magnitudes, well under the _EPS=1e-12 sharing threshold.
     live_mapped: Dict[int, np.ndarray] = {}
     mapped_total = (
-        np.zeros((len(machine.dims), 2) + machine.dims)
-        if mapping_pattern is not None
-        else None
+        np.zeros((len(dims), 2) + dims) if mapping_pattern is not None else None
     )
     # Live jobs' message-level traffic (contention="simulated" only): the
     # flow simulation at a job's start drains its messages together with
     # every live job's.
     live_traffic: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
 
-    # Best achievable internal bisection per job size (isoperimetry engine,
-    # one batched call per distinct size) — the denominator of every
-    # scheduled job's bisection_efficiency.
-    opt_bisection: Dict[int, int] = {}
-
-    def _optimal_bisection(units: int) -> int:
-        if units not in opt_bisection:
-            try:
-                opt_bisection[units] = best_bisection_geometry(machine.dims, units)[1]
-            except ValueError:
-                opt_bisection[units] = 0
-        return opt_bisection[units]
-
-    def try_start(req: JobRequest) -> bool:
-        nonlocal seq, mapped_total
-        placed = policy.allocate(machine, req)
-        if placed is None:
-            return False
+    def on_start(service, job: ScheduledJob) -> None:
+        nonlocal mapped_total
+        if not measure:
+            return
+        machine = service.machine
+        placed = job.placement
         mapping: Optional[RankMapping] = None
-        comm_lower_bound = 0.0
-        simulated_comm_time: Optional[float] = None
-        if measure:
-            if mapping_pattern is not None:
-                mapping = map_ranks(
-                    machine.dims, placed.oriented, placed.offset,
-                    pattern=mapping_pattern, double_link_on_2=double_link_on_2,
-                )
-                job_loads = mapping.loads
-                background = np.maximum(mapped_total, 0.0)
-                live_mapped[placed.job_id] = job_loads
-                mapped_total += job_loads
+        if mapping_pattern is not None:
+            mapping = map_ranks(
+                machine.dims, placed.oriented, placed.offset,
+                pattern=mapping_pattern, double_link_on_2=double_link_on_2,
+            )
+            job_loads = mapping.loads
+            background = np.maximum(mapped_total, 0.0)
+            live_mapped[placed.job_id] = job_loads
+            mapped_total += job_loads
+        else:
+            job_loads = placement_loads(machine.dims, placed.oriented, placed.offset)
+            # The job's own field is excluded in the exact integer domain —
+            # the historical float subtraction left a ~1e-16 residue that
+            # only the _EPS threshold kept invisible.
+            background = machine.traffic_loads(exclude=placed.job_id)
+        job.mapping = mapping
+        job.placement = dataclasses.replace(
+            placed,
+            predicted_contention=float(job_loads[background > _EPS].sum()),
+        )
+        if contention == "simulated":
+            if mapping is not None:
+                job_traffic = mapping.machine_traffic()
             else:
-                job_loads = placement_loads(
+                job_traffic = placement_all_to_all_traffic(
                     machine.dims, placed.oriented, placed.offset
                 )
-                background = machine.traffic_loads() - job_loads
-            placed = dataclasses.replace(
-                placed,
-                predicted_contention=float(job_loads[background > _EPS].sum()),
+            job.comm_lower_bound = (
+                max_link_load(machine.dims, job_loads, double_link_on_2) / link_bw
             )
-            if contention == "simulated":
-                if mapping is not None:
-                    job_traffic = mapping.machine_traffic()
-                else:
-                    job_traffic = placement_all_to_all_traffic(
-                        machine.dims, placed.oriented, placed.offset
-                    )
-                comm_lower_bound = (
-                    max_link_load(machine.dims, job_loads, double_link_on_2)
-                    / link_bw
+            background_traffic = list(live_traffic.values())
+            n_bg = sum(t[2].shape[0] for t in background_traffic)
+            if job_traffic[2].shape[0]:
+                triples = background_traffic + [job_traffic]
+                paths = dor_paths(
+                    machine.dims,
+                    np.concatenate([t[0] for t in triples]),
+                    np.concatenate([t[1] for t in triples]),
+                    np.concatenate([t[2] for t in triples]),
                 )
-                background_traffic = list(live_traffic.values())
-                n_bg = sum(t[2].shape[0] for t in background_traffic)
-                if job_traffic[2].shape[0]:
-                    triples = background_traffic + [job_traffic]
-                    paths = dor_paths(
-                        machine.dims,
-                        np.concatenate([t[0] for t in triples]),
-                        np.concatenate([t[1] for t in triples]),
-                        np.concatenate([t[2] for t in triples]),
-                    )
-                    sim = simulate_flows(
-                        paths,
-                        link_bw=link_bw,
-                        double_link_on_2=double_link_on_2,
-                        backend=backend,
-                    )
-                    simulated_comm_time = float(sim.completion[n_bg:].max())
-                else:
-                    simulated_comm_time = 0.0
-                live_traffic[placed.job_id] = job_traffic
-        node_dims = _node_dims(placed.geometry, unit_node_dims)
-        pred = predict_pairing_time(node_dims, 1.0, link_bw)
-        opt_bis = _optimal_bisection(req.units)
-        job = ScheduledJob(
-            request=req,
-            placement=placed,
-            start=now,
-            end=now + req.duration,
-            predicted_comm_time=pred.time_per_volume,
-            mapping=mapping,
-            comm_lower_bound=comm_lower_bound,
-            simulated_comm_time=simulated_comm_time,
-            bisection_efficiency=(
-                placed.bisection_links / opt_bis if opt_bis else 1.0
-            ),
-        )
-        result.jobs.append(job)
-        heapq.heappush(running, (job.end, seq, job))
-        seq += 1
-        return True
-
-    # (job_id, reservation) of a head whose allocate failed on the *current*
-    # grid: arrival-only wakes cannot newly fit it (the grid only changes on
-    # release), so the placement attempt and the completion-replay
-    # reservation are reused until a release invalidates them.  Backfill
-    # placements do not invalidate the reservation: a backfilled job ends by
-    # t_res, so its cells are free again when the head's reservation is due.
-    blocked: Optional[Tuple[int, float]] = None
-    while arrivals or waiting:
-        while arrivals and arrivals[0].arrival <= now + _EPS:
-            waiting.append(arrivals.popleft())
-        while waiting:
-            head = waiting[0]
-            if blocked is not None and blocked[0] == head.job_id:
-                t_res = blocked[1]
+                sim = simulate_flows(
+                    paths,
+                    link_bw=link_bw,
+                    double_link_on_2=double_link_on_2,
+                    backend=backend,
+                )
+                job.simulated_comm_time = float(sim.completion[n_bg:].max())
             else:
-                if try_start(head):
-                    waiting.pop(0)
-                    continue
-                prefs = policy.preferences_for(machine, head)
-                t_res = _reservation_time(machine, prefs, running, now)
-                if t_res is None:
-                    result.rejected.append(head.job_id)
-                    waiting.pop(0)
-                    continue
-                blocked = (head.job_id, t_res)
-            if backfill:
-                kept: List[JobRequest] = []
-                for req in waiting[1:]:
-                    if not (now + req.duration <= t_res + _EPS and try_start(req)):
-                        kept.append(req)
-                waiting[1:] = kept
-            break
-        if not arrivals and not waiting:
-            break
-        next_times = []
-        if running:
-            next_times.append(running[0][0])
-        if arrivals:
-            next_times.append(arrivals[0].arrival)
-        # A blocked head implies a non-empty machine, hence running jobs; an
-        # empty waiting list implies pending arrivals — next_times is never
-        # empty here.
-        now = max(now, min(next_times))
-        while running and running[0][0] <= now + _EPS:
-            _, _, done = heapq.heappop(running)
-            machine.release(done.request.job_id)
-            released = live_mapped.pop(done.request.job_id, None)
-            if released is not None:
-                mapped_total -= released
-            live_traffic.pop(done.request.job_id, None)
-            blocked = None  # freed cells: the head is worth retrying
-    return result
+                job.simulated_comm_time = 0.0
+            live_traffic[placed.job_id] = job_traffic
+
+    def on_release(service, job_id: int) -> None:
+        nonlocal mapped_total
+        released = live_mapped.pop(job_id, None)
+        if released is not None:
+            mapped_total -= released
+        live_traffic.pop(job_id, None)
+
+    service = SchedulerService(
+        dims,
+        policy,
+        unit_node_dims=unit_node_dims,
+        link_bw=link_bw,
+        backfill=backfill,
+        on_start=on_start,
+        on_release=on_release,
+    )
+    for _, req in sorted(enumerate(jobs), key=lambda t: (t[1].arrival, t[0])):
+        service.submit(req)
+    return service.run().result()
 
 
 def _node_dims(geometry: Geometry, unit_node_dims: Optional[Sequence[int]]) -> Geometry:

@@ -348,6 +348,61 @@ def _base_loads_cached(dims: Geometry, oriented: Tuple[int, ...]) -> np.ndarray:
     return arr
 
 
+def int_base_loads(dims: Geometry, oriented: Tuple[int, ...]) -> np.ndarray:
+    """The placement's all-to-all load field at the origin, scaled by
+    ``2 * n`` (n = cells in the placement) so every value is an exact
+    ``int64``.
+
+    :func:`placement_loads` routes volume ``1/n`` per ordered pair, so raw
+    per-link loads are multiples of ``1/(2n)`` (the ``1/2`` from antipodal
+    tie splitting) — not exactly representable when ``n`` is not a power of
+    two, which is why float accumulation across placements of different
+    sizes can never be subtracted back out bit-exactly.  Routing the same
+    messages with volume ``2`` instead makes every contribution — including
+    split ties — an integer, so the field is exact and placement sums live
+    in int64 where addition *and subtraction* are lossless:
+    ``placement_loads(...) == int_base_loads(...) / (2 * n)`` up to one
+    float rounding, with identical support.  This is the representation
+    :class:`repro.network.allocation.MachineState` maintains incrementally.
+    Memoised — callers must not mutate the returned array.
+    """
+    return _int_base_loads_cached(
+        tuple(int(a) for a in dims), tuple(int(w) for w in oriented)
+    )
+
+
+@lru_cache(maxsize=512)
+def _int_base_loads_cached(dims: Geometry, oriented: Tuple[int, ...]) -> np.ndarray:
+    from .routing import route_dor
+
+    src, dst, _ = placement_all_to_all_traffic(dims, oriented, (0,) * len(dims))
+    if src.shape[0] == 0:
+        arr = np.zeros((len(dims), 2) + dims, dtype=np.int64)
+    else:
+        # Volume 2 per ordered pair: whole messages contribute 2 per link,
+        # split antipodal ties 1 per direction — every partial sum is an
+        # integer-valued float (exact below 2**53), so rint is a no-op
+        # safeguard rather than a rounding step.
+        raw = route_dor(dims, src, dst, np.full(src.shape[0], 2.0))
+        arr = np.rint(raw).astype(np.int64)
+    arr.setflags(write=False)
+    return arr
+
+
+def int_placement_loads(
+    dims: Sequence[int], oriented: Sequence[int], offset: Coord
+) -> np.ndarray:
+    """:func:`int_base_loads` translated to ``offset`` (loads are
+    translation-covariant, so this is a roll of the memoised origin field).
+    Do not mutate the returned array — at the origin it *is* the cache."""
+    dims = tuple(int(a) for a in dims)
+    base = int_base_loads(dims, tuple(int(w) for w in oriented))
+    off = tuple(int(o) % a for o, a in zip(offset, dims))
+    if not any(off):
+        return base
+    return np.roll(base, off, axis=tuple(range(2, 2 + len(dims))))
+
+
 def interference_mask(
     grid: np.ndarray, background_loads: Optional[np.ndarray] = None
 ) -> np.ndarray:

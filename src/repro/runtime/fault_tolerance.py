@@ -63,6 +63,22 @@ class HeartbeatMonitor:
         return [w for w in self.last_seen if w not in self.failed]
 
 
+def failure_cells(
+    monitor: HeartbeatMonitor, worker_cells: Dict[str, Tuple[int, ...]]
+) -> List[Tuple[int, ...]]:
+    """Torus cells of the workers ``monitor.check()`` newly declares dead.
+
+    The glue between heartbeat detection and the network scheduler: feed
+    the returned cells to
+    :meth:`repro.network.scheduler.SchedulerService.inject_failure` (via
+    :func:`repro.network.scheduler.apply_monitor_failures`) and the
+    scheduler evacuates the jobs running on them, requeues them with their
+    remaining duration, and keeps the cells out of the free pool until a
+    ``Reclaim`` repairs them.  Workers without a cell assignment (e.g.
+    spares) are skipped."""
+    return [tuple(worker_cells[w]) for w in monitor.check() if w in worker_cells]
+
+
 # ---------------------------------------------------------------------------
 # Straggler mitigation
 # ---------------------------------------------------------------------------

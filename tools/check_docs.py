@@ -43,6 +43,7 @@ AUDITED_MODULES = [
     "repro.network.collectives",
     "repro.network.placement",
     "repro.network.allocation",
+    "repro.network.scheduler",
     "repro.network.mapping",
     "repro.network.backend",
     "repro.utils.env",
