@@ -1,0 +1,157 @@
+"""Fleet-planner micro-benchmark: batched candidate pricing vs sequential.
+
+Acceptance benchmark for :mod:`repro.launch.planner`'s hot loop — scoring
+the mapping catalogue for every (geometry, sharding-rule) pair.  The
+planner hands the whole candidate stack of one rule's rank traffic to the
+``vmap``-batched :func:`repro.network.backend.score_candidates` in a
+single compiled call; the baseline is the sequential ``score_mapping``
+loop the numpy path runs.  The batched pricing must be >= 10x faster and
+**row-exact**: identical congestion/dilation on every candidate, so the
+chosen mapping — and therefore the planner's whole ranked table — is
+backend-independent (pinned separately in ``tests/test_backend.py``).
+
+The candidate stacks are the planner's own: the mapping catalogue
+(identity, axis permutations, gray-snake) for every sharding rule of a
+Mixtral-scale MoE job on a 4D torus, replicated to advisor scale.
+
+Run standalone (writes BENCH_planner.json):
+
+    PYTHONPATH=src python benchmarks/bench_planner.py [--json PATH]
+
+or via the harness (`PYTHONPATH=src python -m benchmarks.run`), which
+registers :func:`planner_microbench`.  Requires jax; the gate can be
+relaxed on loaded CI runners with BENCH_PLANNER_MIN_SPEEDUP (the
+row-identity assertions never weaken).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs import SHAPES, get_arch
+from repro.launch.planner import (
+    enumerate_rules,
+    pairing_stress_volume,
+    rule_rank_traffic,
+    rule_traffic,
+)
+from repro.network import score_candidates
+from repro.network.fabric import TorusFabric
+from repro.network.mapping import (
+    axis_order_coords,
+    axis_permutation_orders,
+    identity_mapping,
+    score_mapping,
+    snake_mapping,
+)
+
+ARCH = "mixtral-8x7b"
+SHAPE = "decode_32k"
+DIMS = (2, 2, 2, 2)  # one planner slice geometry: 16 chips, 4D
+CHIPS = 16
+REPLICAS = 24  # replicate the catalogue to advisor scale per rule
+TARGET_SPEEDUP = float(os.environ.get("BENCH_PLANNER_MIN_SPEEDUP", "10"))
+
+
+def _catalogue(fabric: TorusFabric) -> np.ndarray:
+    """The planner's mapping candidates for one fabric, stacked."""
+    dims = fabric.dims
+    offset = (0,) * len(dims)
+    cands = [identity_mapping(dims, dims, offset)]
+    for perm, rev in axis_permutation_orders(dims):
+        if all(p == i for i, p in enumerate(perm)) and not any(rev):
+            continue
+        cands.append(axis_order_coords(dims, dims, offset, perm, rev))
+    cands.append(snake_mapping(dims, dims, offset))
+    return np.stack(cands)
+
+
+def _rule_stacks(fabric: TorusFabric) -> List[Tuple[Tuple[int, ...], tuple, np.ndarray]]:
+    """(axis_sizes, rank traffic, candidate stack) per sharding rule with
+    non-empty traffic, catalogue replicated to advisor scale."""
+    cfg = get_arch(ARCH)
+    shape = SHAPES[SHAPE]
+    base = _catalogue(fabric)
+    stacks = []
+    for rule in enumerate_rules(cfg, CHIPS):
+        entries = rule_traffic(cfg, shape, rule.axis_sizes)
+        pair = pairing_stress_volume(entries, rule.axis_sizes)
+        traffic = rule_rank_traffic(rule.axis_sizes, entries, pair)
+        if traffic is None:
+            continue
+        stacks.append((rule.axis_sizes, traffic, np.tile(base, (REPLICAS, 1, 1))))
+    return stacks
+
+
+def planner_microbench() -> Tuple[List[dict], str]:
+    fabric = TorusFabric.tpu(DIMS)
+    stacks = _rule_stacks(fabric)
+    assert stacks, "no sharding rules with traffic — benchmark is vacuous"
+    n_cands = sum(s.shape[0] for _, _, s in stacks)
+
+    # Batched pricing: one compiled call per rule stack (the planner's
+    # shape). Warm up the jit cache first, then take the best of 3.
+    for _, traffic, stack in stacks:
+        score_candidates(fabric.dims, stack, traffic, backend="xla")
+    t_fast = float("inf")
+    batched = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        batched = [
+            score_candidates(fabric.dims, stack, traffic, backend="xla")
+            for _, traffic, stack in stacks
+        ]
+        t_fast = min(t_fast, time.perf_counter() - t0)
+
+    # Sequential baseline: the numpy score_mapping loop.
+    t0 = time.perf_counter()
+    sequential = [
+        [score_mapping(fabric.dims, c, traffic) for c in stack]
+        for _, traffic, stack in stacks
+    ]
+    t_slow = time.perf_counter() - t0
+
+    # Row-exact identity on every candidate of every rule.
+    for (cong_x, dil_x), refs in zip(batched, sequential):
+        for i, ref in enumerate(refs):
+            assert cong_x[i] == ref.congestion, (i, cong_x[i], ref.congestion)
+            assert dil_x[i] == ref.dilation, (i, dil_x[i], ref.dilation)
+
+    speedup = t_slow / t_fast
+    assert speedup >= TARGET_SPEEDUP, f"speedup {speedup:.1f}x < {TARGET_SPEEDUP}x"
+
+    rows = [
+        {
+            "case": "rule_catalogue_pricing",
+            "arch": ARCH,
+            "shape": SHAPE,
+            "dims": list(DIMS),
+            "rules": len(stacks),
+            "candidates": int(n_cands),
+            "batched_s": round(t_fast, 5),
+            "sequential_s": round(t_slow, 4),
+            "speedup": round(speedup, 1),
+        }
+    ]
+    return rows, f"speedup={speedup:.0f}x,candidates={n_cands}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_planner.json", help="output path")
+    args = ap.parse_args()
+    rows, derived = planner_microbench()
+    out = Path(args.json)
+    out.write_text(json.dumps({"benchmark": "planner_microbench", "rows": rows}, indent=1))
+    print(f"planner_microbench: {derived} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,7 @@ from benchmarks.bench_backend import backend_microbench
 from benchmarks.bench_isoperimetry import isoperimetry_microbench
 from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_netsim import netsim_microbench
+from benchmarks.bench_planner import planner_microbench
 from benchmarks.bench_routing import routing_microbench
 from benchmarks.bench_scheduler import scheduler_microbench
 from benchmarks.matmul_scaling import fig5_matmul, fig6_strong_scaling
@@ -59,6 +60,7 @@ BENCHMARKS = [
     ("isoperimetry_microbench", isoperimetry_microbench),
     ("backend_microbench", backend_microbench),
     ("scheduler_microbench", scheduler_microbench),
+    ("planner_microbench", planner_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]
@@ -74,6 +76,7 @@ GATED = {
     "isoperimetry_microbench": ("BENCH_isoperimetry.json", "BENCH_ISOPERIMETRY_MIN_SPEEDUP"),
     "backend_microbench": ("BENCH_backend.json", "BENCH_BACKEND_MIN_SPEEDUP"),
     "scheduler_microbench": ("BENCH_scheduler.json", "BENCH_SCHEDULER_MIN_SPEEDUP"),
+    "planner_microbench": ("BENCH_planner.json", "BENCH_PLANNER_MIN_SPEEDUP"),
 }
 
 

@@ -1,4 +1,4 @@
-"""Assigned architecture configs (10 archs from the public pool) + shapes."""
+"""Assigned architecture configs (11 archs from the public pool) + shapes."""
 
 import importlib
 
@@ -25,6 +25,7 @@ _MODULES = [
     "zamba2_2_7b",
     "mixtral_8x7b",
     "phi3_5_moe_42b",
+    "llama3_70b",
 ]
 
 _loaded = False

@@ -47,6 +47,47 @@ def _shard_if(dim: int, axis, mesh: Mesh):
     return axis if axis is not None and dim % axis_size(mesh, axis) == 0 else None
 
 
+def _flatten_spec_axes(spec) -> list:
+    """Mesh-axis names referenced by one PartitionSpec-style entry tuple."""
+    flat = []
+    for entry in spec:
+        if entry is None:
+            continue
+        flat.extend(entry if isinstance(entry, tuple) else (entry,))
+    return flat
+
+
+def validate_partition_spec(spec, mesh_axes) -> None:
+    """Reject ill-formed PartitionSpec-style rules.
+
+    ``spec`` is a sequence of per-dimension entries (``None``, an axis
+    name, or a tuple of axis names); ``mesh_axes`` is the mesh's axis-name
+    collection (a ``Mesh``, a dict of sizes, or an iterable of names).
+    Raises ``ValueError`` when a mesh axis is reused across dimensions (or
+    twice within one dimension group) — GSPMD would reject it at lowering,
+    but a cost model fed such a rule silently double-counts the axis and
+    prices wrong collective volumes — and when a rule references an axis
+    that does not exist on the mesh.
+    """
+    names = getattr(mesh_axes, "axis_names", None)
+    if names is None:
+        names = tuple(mesh_axes)
+    known = set(names)
+    flat = _flatten_spec_axes(spec)
+    unknown = [a for a in flat if a not in known]
+    if unknown:
+        raise ValueError(
+            f"partition spec {tuple(spec)} references axes {unknown} absent "
+            f"from mesh axes {tuple(names)}"
+        )
+    if len(flat) != len(set(flat)):
+        dupes = sorted({a for a in flat if flat.count(a) > 1})
+        raise ValueError(
+            f"partition spec {tuple(spec)} reuses mesh axes {dupes} across "
+            f"conflicting tensor dimensions"
+        )
+
+
 class ShardingRules:
     """Computes PartitionSpecs for a (cfg, mesh) pair."""
 
@@ -63,6 +104,22 @@ class ShardingRules:
         names = mesh.axis_names
         if fsdp_axes is None:
             fsdp_axes = tuple(n for n in names if n != model_axis)
+        unknown = [a for a in fsdp_axes if a not in names]
+        if unknown:
+            raise ValueError(
+                f"fsdp_axes {tuple(fsdp_axes)} reference axes {unknown} absent "
+                f"from mesh axes {tuple(names)}"
+            )
+        if model_axis in names and model_axis in fsdp_axes:
+            raise ValueError(
+                f"model_axis {model_axis!r} also appears in fsdp_axes "
+                f"{tuple(fsdp_axes)}: one mesh axis cannot shard both a "
+                f"tensor-parallel dimension and the FSDP dimension of the "
+                f"same parameter (the rules would emit conflicting specs "
+                f"with silently wrong collective volumes)"
+            )
+        if len(set(fsdp_axes)) != len(tuple(fsdp_axes)):
+            raise ValueError(f"fsdp_axes {tuple(fsdp_axes)} repeat a mesh axis")
         self.fsdp: Tuple[str, ...] = tuple(fsdp_axes)
         self.model = model_axis if model_axis in names else None
 
@@ -103,8 +160,9 @@ class ShardingRules:
             stack = 2 if "mamba_layers" in names else 1
         core = shape[stack:]
         leaf = names[-1] if names else ""
-        spec = self._core_spec(names, leaf, core)
-        return P(*([None] * stack + list(spec)))
+        spec = [None] * stack + list(self._core_spec(names, leaf, core))
+        validate_partition_spec(spec, self.mesh)
+        return P(*spec)
 
     def _core_spec(self, names, leaf, core) -> Sequence:
         cfg, mesh = self.cfg, self.mesh

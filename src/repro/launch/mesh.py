@@ -85,6 +85,10 @@ class MeshPlan:
     #: pod — 1.0 for geometry-only plans; < 1.0 when occupancy forced the
     #: planner down the ranked list.
     bisection_efficiency: float = 1.0
+    #: The fleet planner's full ranked table
+    #: (:class:`repro.launch.planner.SlicePlan`) when the plan was built
+    #: with ``plan_slice(..., arch=...)``; None for geometry-only planning.
+    slice_plan: Optional[object] = None
 
     @property
     def avoidable_contention(self) -> float:
@@ -113,6 +117,8 @@ def plan_slice(
     state: Optional[MachineState] = None,
     job_id: Optional[int] = None,
     simulate: bool = False,
+    arch: Optional[str] = None,
+    shape: str = "decode_32k",
 ) -> MeshPlan:
     """Choose slice geometry + axis layout for a C-chip job on one pod.
 
@@ -148,15 +154,34 @@ def plan_slice(
     ``MeshPlan.simulated_slowdown`` — the dynamic counterpart of
     ``mapping_congestion``, only available for occupancy-aware plans
     (geometry-only plans have no concrete cells to simulate on).
+
+    ``arch`` switches on **planner-backed** mode: the fleet planner
+    (:func:`repro.launch.planner.plan_model`) jointly searches geometry x
+    mapping x sharding rule for that config under the given ``shape`` cell,
+    the geometry walk follows the planner's ranked-table preference order
+    (which may *deliberately* prefer a lower-bisection slice when a
+    wrapped ring pays for it), the logical axes come from the winning
+    sharding rule, and the full ranked table rides on
+    ``MeshPlan.slice_plan``.
     """
     pod = pod or pod_fabric()
+    slice_plan = None
+    if arch is not None:
+        from repro.launch.planner import plan_model  # lazy: mesh <- planner cycle
+
+        slice_plan = plan_model(arch, chips, pod=pod, shape=shape)
     placement: Optional[Placement] = None
     best_bis: Optional[int] = None
     if state is None:
         if job_id is not None:
             raise ValueError("job_id requires a state (occupancy grid) to commit to")
-        geom, bis = best_slice_geometry(pod, chips)
-        best_bis = bis
+        if slice_plan is not None:
+            geom = slice_plan.geometry
+            bis = slice_fabric(pod, geom).bisection_links()
+            best_bis = ranked_slice_geometries(pod, chips)[0][1]
+        else:
+            geom, bis = best_slice_geometry(pod, chips)
+            best_bis = bis
     else:
         if tuple(state.dims) != tuple(pod.dims):
             raise ValueError(
@@ -166,6 +191,11 @@ def plan_slice(
         bis = 0
         ranked = ranked_slice_geometries(pod, chips)
         best_bis = ranked[0][1]
+        if slice_plan is not None:
+            ranked = [
+                (g, slice_fabric(pod, g).bisection_links())
+                for g in slice_plan.geometry_preferences()
+            ]
         for g, b in ranked:
             cand = best_placement(state.grid, g, state.traffic_loads())
             if cand is not None:
@@ -194,24 +224,35 @@ def plan_slice(
     # slice dims (largest dim -> data).
     dims = sorted(fabric.dims, reverse=True)
     axes = {"data": dims[0], "model": chips // dims[0]}
+    order_hint = ["model", "data"]
+    if slice_plan is not None:
+        # Planner-backed: the winning sharding rule's non-trivial axes.
+        from repro.launch.planner import AXES, ORDER_HINT
+
+        planned = {
+            name: size
+            for name, size in zip(AXES, slice_plan.best.axis_sizes)
+            if size > 1
+        }
+        if planned and _axes_embed(fabric, planned):
+            axes = planned
+            order_hint = [a for a in ORDER_HINT if a in axes]
     mapping = None
     if placement is not None:
-        # Embed the logical (data, model) mesh onto the placed chips:
-        # minimise ring-collective congestion (logical halo traffic), then
-        # let the axis assignment price collectives with the measured
-        # stride/wrap of the chosen mapping.
+        # Embed the logical mesh onto the placed chips: minimise
+        # ring-collective congestion (logical halo traffic), then let the
+        # axis assignment price collectives with the measured stride/wrap
+        # of the chosen mapping.
         mapping = map_ranks(
             pod.dims,
             placement.oriented,
             placement.offset,
-            logical_dims=(axes["data"], axes["model"]),
+            logical_dims=tuple(axes.values()),
             pattern="halo",
             double_link_on_2=pod.double_link_on_2,
             wrap=pod.wrap,
         )
-    assignment = assign_axes(
-        fabric, axes, order_hint=["model", "data"], mapping=mapping
-    )
+    assignment = assign_axes(fabric, axes, order_hint=order_hint, mapping=mapping)
     simulated_slowdown = None
     if simulate and mapping is not None:
         sim = simulate_traffic(
@@ -232,7 +273,18 @@ def plan_slice(
         mapping=mapping,
         simulated_slowdown=simulated_slowdown,
         bisection_efficiency=(bis / best_bis if best_bis else 1.0),
+        slice_plan=slice_plan,
     )
+
+
+def _axes_embed(fabric: TorusFabric, axes: Dict[str, int]) -> bool:
+    """Whether every logical axis can occupy whole physical dims of the
+    fabric (the jax device-mesh reshape constraint assign_axes enforces)."""
+    try:
+        assign_axes(fabric, axes, order_hint=list(axes))
+        return True
+    except ValueError:
+        return False
 
 
 def plan_axes(

@@ -29,7 +29,22 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--plan-chips", type=int, default=None,
+        help="dry-run: print the fleet planner's ranked slice plan for this "
+             "arch at the given chip budget, then exit (no model is built)",
+    )
+    ap.add_argument("--plan-shape", default="decode_32k")
     args = ap.parse_args(argv)
+
+    if args.plan_chips is not None:
+        from repro.launch.planner import format_table, plan_model
+
+        plan = plan_model(
+            args.arch, args.plan_chips, shape=args.plan_shape, simulate_top_k=1
+        )
+        print(format_table(plan))
+        return plan
 
     arch = get_arch(args.arch)
     if args.reduced:

@@ -50,7 +50,22 @@ def main(argv=None):
     ap.add_argument("--compress", choices=["none", "int8", "topk"], default="none")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--plan-chips", type=int, default=None,
+        help="dry-run: print the fleet planner's ranked slice plan for this "
+             "arch at the given chip budget, then exit (no model is built)",
+    )
+    ap.add_argument("--plan-shape", default="train_4k")
     args = ap.parse_args(argv)
+
+    if args.plan_chips is not None:
+        from repro.launch.planner import format_table, plan_model
+
+        plan = plan_model(
+            args.arch, args.plan_chips, shape=args.plan_shape, simulate_top_k=1
+        )
+        print(format_table(plan))
+        return plan
 
     arch = get_arch(args.arch)
     if args.reduced:

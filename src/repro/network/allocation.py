@@ -73,13 +73,33 @@ class JobRequest:
     """One job in the queue: ``units`` allocation units (midplanes/chips),
     an ``arrival`` timestamp and a ``duration``, both in the simulator's
     abstract time units; ``contention_bound`` is the Section-5 scheduler
-    hint consumed by :class:`HintedPolicy`."""
+    hint consumed by :class:`HintedPolicy`.
+
+    ``geometry`` optionally carries a planner-chosen partition geometry
+    (e.g. :meth:`repro.launch.planner.SlicePlan.to_request`): every policy
+    tries it first and only then falls back to its own preference list, so
+    a fleet-planner decision survives scheduling without a custom policy.
+    """
 
     job_id: int
     units: int  # allocation units (midplanes / chips)
     contention_bound: bool = True
     duration: float = 1.0  # abstract time units, for the queue simulator
     arrival: float = 0.0  # submission time (0 = all queued up front)
+    geometry: Optional[Geometry] = None  # planner-requested partition shape
+
+    def __post_init__(self):
+        if self.geometry is not None:
+            g = canonical(self.geometry)
+            n = 1
+            for a in g:
+                n *= a
+            if n != self.units:
+                raise ValueError(
+                    f"requested geometry {tuple(self.geometry)} has volume "
+                    f"{n}, but the request asks for {self.units} units"
+                )
+            object.__setattr__(self, "geometry", g)
 
 
 @dataclass(frozen=True)
@@ -290,6 +310,18 @@ class MachineState:
 # ---------------------------------------------------------------------------
 # Policies.
 # ---------------------------------------------------------------------------
+def _honor_requested_geometry(
+    prefs: List[Geometry], request: JobRequest
+) -> List[Geometry]:
+    """Move a request's planner-chosen geometry to the front of a policy's
+    preference list (dropping the duplicate further down); identity when
+    the request carries no geometry."""
+    if request.geometry is None:
+        return prefs
+    g = request.geometry
+    return [g] + [p for p in prefs if p != g]
+
+
 class AllocationPolicy:
     """Base policy: a preference-ordered geometry list per request, placed
     first-fit down the list (scored policies override :meth:`allocate`)."""
@@ -302,7 +334,9 @@ class AllocationPolicy:
 
     def preferences_for(self, machine: MachineState, request: JobRequest) -> List[Geometry]:
         """Request-aware preference list (hinted policies override)."""
-        return self.geometry_preferences(machine, request.units)
+        return _honor_requested_geometry(
+            self.geometry_preferences(machine, request.units), request
+        )
 
     def allocate(self, machine: MachineState, request: JobRequest) -> Optional[Placement]:
         """Place the request on the machine, or return None.  Default:
@@ -371,7 +405,12 @@ class HintedPolicy(AllocationPolicy):
         return pol.geometry_preferences(machine, units)
 
     def preferences_for(self, machine: MachineState, request: JobRequest) -> List[Geometry]:
-        return self.geometry_preferences(machine, request.units, request.contention_bound)
+        return _honor_requested_geometry(
+            self.geometry_preferences(
+                machine, request.units, request.contention_bound
+            ),
+            request,
+        )
 
 
 class ContentionScoredPolicy(AllocationPolicy):

@@ -275,3 +275,37 @@ def test_env_backend_reaches_engines(monkeypatch):
     monkeypatch.setenv("REPRO_NETWORK_BACKEND", "numpy")
     ref = simulate_traffic((4, 4), bisection_pairing((4, 4)))
     assert abs(res.makespan - ref.makespan) <= 1e-9 * max(ref.makespan, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-planner backend parity: the ranked table is bit-identical whether
+# candidate mappings are scored sequentially (numpy) or batched (xla).
+# ---------------------------------------------------------------------------
+@needs_jax
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_planner_table_backend_parity(shape):
+    from repro.configs import ArchConfig, MoEConfig
+    from repro.launch.planner import plan_model
+    from repro.network.fabric import TorusFabric
+
+    tiny = ArchConfig(
+        name="tiny-moe-backend", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+        moe=MoEConfig(num_experts=4, top_k=2),
+    )
+    pod = TorusFabric.tpu((4, 4))
+    p_np = plan_model(tiny, 8, pod=pod, shape=shape, backend="numpy")
+    p_x = plan_model(tiny, 8, pod=pod, shape=shape, backend="xla")
+    assert [c.row() for c in p_np.table] == [c.row() for c in p_x.table]
+
+
+@needs_jax
+def test_planner_env_backend_dispatch(monkeypatch):
+    from repro.launch.planner import plan_model
+    from repro.network.fabric import TorusFabric
+
+    pod = TorusFabric.tpu((4, 4))
+    ref = plan_model("mixtral-8x7b", 8, pod=pod, shape="decode_32k")
+    monkeypatch.setenv("REPRO_NETWORK_BACKEND", "xla")
+    env = plan_model("mixtral-8x7b", 8, pod=pod, shape="decode_32k")
+    assert [c.row() for c in ref.table] == [c.row() for c in env.table]

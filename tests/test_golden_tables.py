@@ -262,3 +262,56 @@ def test_partition_analysis_example_end_to_end():
         assert bounded == "True"
         assert float(max_s) >= float(mean_s) >= 1.0
     assert "slows the small job x1.40" in out
+
+
+# ---------------------------------------------------------------------------
+# Fleet-planner golden plans on Mira's node torus (16 midplanes, train_4k).
+# arch -> (best (d,f,t,e), best mapping, step seconds, comm seconds,
+#          worst/best step ratio, table rows).
+# ---------------------------------------------------------------------------
+GOLDEN_FLEET_PLANS = {
+    "mixtral-8x7b": (
+        (1, 16, 1, 1), "gray-snake", 65.76192673719228, 65.67542784,
+        68.97977716257631, 52,
+    ),
+    "qwen1.5-110b": (
+        (1, 16, 1, 1), "gray-snake", 156.98542122669093, 156.38593536000002,
+        24.626936833096032, 13,
+    ),
+    "nemotron-4-340b": (
+        (16, 1, 1, 1), "gray-snake", 322.1977022487287, 320.374259712,
+        32.39810184542654, 36,
+    ),
+}
+
+
+def test_fleet_planner_mira_golden():
+    """The joint geometry x mapping x sharding search lands on the paper's
+    certified-optimal (2, 2, 2, 2) cube for every flagship model, the chosen
+    geometry's bisection matches ``advise_partition``'s optimum exactly, and
+    the worst table row pays well over the paper's 1.3x avoidable-contention
+    floor relative to the best."""
+    from repro.launch.planner import plan_model
+    from repro.network.fabric import TorusFabric
+
+    pod = TorusFabric.bgq(MIRA.midplane_dims, link_bw=2e9)
+    for arch, (axes, strategy, step, comm, ratio, rows) in GOLDEN_FLEET_PLANS.items():
+        plan = plan_model(
+            arch, 16, pod=pod, shape="train_4k",
+            wrap_mode="torus", unit_node_dims=MIDPLANE_DIMS,
+        )
+        best, worst = plan.table[0], plan.table[-1]
+        assert plan.geometry == (2, 2, 2, 2)
+        assert plan.bisection_efficiency == pytest.approx(1.0)
+        adv = advise_partition(
+            MIRA.midplane_dims, 16, plan.geometry, unit_node_dims=MIDPLANE_DIMS
+        )
+        assert adv.optimal_geometry == plan.geometry
+        assert adv.current_bisection == adv.optimal_bisection
+        assert best.axis_sizes == axes
+        assert best.mapping_strategy == strategy
+        assert best.step_time == pytest.approx(step, rel=1e-9)
+        assert best.comm_time == pytest.approx(comm, rel=1e-9)
+        assert worst.step_time / best.step_time == pytest.approx(ratio, rel=1e-9)
+        assert worst.step_time / best.step_time >= 1.3
+        assert len(plan.table) == rows

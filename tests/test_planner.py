@@ -1,0 +1,325 @@
+"""Differential test harness for the fleet planner.
+
+The planner (``repro.launch.planner``) promises three reproducibility
+contracts, each pinned here:
+
+1. its ranked table is **row-identical** to the brute-force oracle
+   (``reference_planner``) that prices every (geometry, mapping, rule)
+   triple sequentially — floats compared bit-exact, on random fabrics up
+   to 4D with small configs;
+2. every emitted comm time is reproduced **standalone**: the ring part by
+   re-running ``assign_axes(mapping=)`` + ``COLLECTIVE_TIME`` outside the
+   planner, the pairing part by draining the bisection-pairing pattern
+   through the flow simulator (the section-7 static==dynamic property);
+3. ``simulated_slowdown >= 1`` on every emitted plan, by conservation
+   (a flow simulation can never beat the zero-contention bound).
+
+Plus the scheduler/mesh wiring: a plan's ``to_request`` carries its
+geometry through every allocation policy, and ``plan_slice(arch=...)``
+attaches the full table.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from reference_planner import reference_plan, reference_rules
+from repro.configs import SHAPES, ArchConfig, MoEConfig
+from repro.launch.mesh import plan_slice
+from repro.launch.planner import (
+    AXES,
+    PlanCandidate,
+    default_chip_budget,
+    enumerate_rules,
+    format_table,
+    plan_fleet,
+    plan_model,
+    rule_traffic,
+)
+from repro.network.allocation import (
+    ContentionScoredPolicy,
+    HintedPolicy,
+    IsoperimetricPolicy,
+    JobRequest,
+    MachineState,
+)
+from repro.network.collectives import COLLECTIVE_TIME, assign_axes
+from repro.network.fabric import TorusFabric
+from repro.network.netsim import simulate_traffic
+from repro.network.patterns import bisection_pairing
+
+TINY_DENSE = ArchConfig(
+    name="tiny-dense", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+)
+TINY_MOE = ArchConfig(
+    name="tiny-moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab_size=256,
+    moe=MoEConfig(num_experts=4, top_k=2),
+)
+
+# (pod dims, chips) pools: fabrics <= 4D, every chip count admits a cuboid.
+SLICE_CASES = [
+    ((4, 2), 4), ((4, 2), 8), ((4, 4), 4), ((4, 4), 8),
+    ((2, 2, 2), 4), ((2, 2, 2), 8), ((4, 2, 2), 8), ((6, 2), 4),
+    ((2, 2, 2, 2), 8), ((2, 2, 2, 2), 16),
+]
+TORUS_CASES = [
+    ((2, 2, 2), 4), ((4, 2, 2), 8), ((4, 4, 2), 8), ((2, 2, 2, 2), 4),
+]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+def _rows(plan):
+    return [c.row() for c in plan.table]
+
+
+# ---------------------------------------------------------------------------
+# 1. planner == brute-force oracle (row-identical, floats bit-exact).
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    case=st.sampled_from(SLICE_CASES),
+    cfg=st.sampled_from([TINY_DENSE, TINY_MOE]),
+    shape=st.sampled_from(SHAPE_NAMES),
+)
+def test_planner_matches_oracle_slice(case, cfg, shape):
+    dims, chips = case
+    pod = TorusFabric.tpu(dims)
+    plan = plan_model(cfg, chips, pod=pod, shape=shape)
+    oracle = reference_plan(cfg, chips, pod, shape, wrap_mode="slice")
+    assert _rows(plan) == oracle
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    case=st.sampled_from(TORUS_CASES),
+    cfg=st.sampled_from([TINY_DENSE, TINY_MOE]),
+    shape=st.sampled_from(SHAPE_NAMES),
+)
+def test_planner_matches_oracle_torus(case, cfg, shape):
+    dims, chips = case
+    pod = TorusFabric.bgq(dims, link_bw=2e9)
+    plan = plan_model(cfg, chips, pod=pod, shape=shape, wrap_mode="torus")
+    oracle = reference_plan(cfg, chips, pod, shape, wrap_mode="torus")
+    assert _rows(plan) == oracle
+
+
+def test_planner_deterministic():
+    a = plan_model(TINY_MOE, 8, pod=TorusFabric.tpu((4, 4)), shape="train_4k")
+    b = plan_model(TINY_MOE, 8, pod=TorusFabric.tpu((4, 4)), shape="train_4k")
+    assert _rows(a) == _rows(b)
+
+
+# ---------------------------------------------------------------------------
+# 2. comm time reproduced standalone: assign_axes(mapping=) + netsim.
+# ---------------------------------------------------------------------------
+def _assert_comm_reproduced(cand: PlanCandidate):
+    assignment = assign_axes(
+        cand.fabric, cand.rule.mesh_shape,
+        order_hint=cand.rule.order_hint, mapping=cand.mapping,
+    )
+    ring = 0.0
+    for axis, collective, vol in cand.traffic:
+        ring += COLLECTIVE_TIME[collective](
+            vol, assignment.embedding(axis), cand.fabric.link_bw
+        )
+    assert ring == cand.ring_time
+    if cand.pair_volume_node > 0.0:
+        sim = simulate_traffic(
+            cand.node_dims,
+            bisection_pairing(cand.node_dims),
+            link_bw=cand.fabric.link_bw,
+            double_link_on_2=cand.fabric.double_link_on_2,
+        )
+        assert math.isclose(
+            cand.pairing_time, cand.pair_volume_node * sim.makespan,
+            rel_tol=1e-9,
+        )
+    else:
+        assert cand.pairing_time == 0.0
+    assert cand.comm_time == cand.ring_time + cand.pairing_time
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(
+    case=st.sampled_from(SLICE_CASES[:6]),
+    cfg=st.sampled_from([TINY_DENSE, TINY_MOE]),
+    shape=st.sampled_from(SHAPE_NAMES),
+)
+def test_comm_time_standalone_reproduction(case, cfg, shape):
+    dims, chips = case
+    plan = plan_model(cfg, chips, pod=TorusFabric.tpu(dims), shape=shape)
+    for cand in plan.table:
+        _assert_comm_reproduced(cand)
+
+
+@pytest.mark.slow
+def test_comm_time_standalone_reproduction_torus():
+    plan = plan_model(
+        TINY_MOE, 8, pod=TorusFabric.bgq((4, 2, 2), link_bw=2e9),
+        shape="train_4k", wrap_mode="torus",
+    )
+    for cand in plan.table:
+        _assert_comm_reproduced(cand)
+
+
+# ---------------------------------------------------------------------------
+# 3. simulated slowdown >= 1 by conservation, on every emitted row.
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(
+    case=st.sampled_from([((4, 2), 4), ((4, 2), 8), ((2, 2, 2), 8)]),
+    cfg=st.sampled_from([TINY_DENSE, TINY_MOE]),
+    shape=st.sampled_from(SHAPE_NAMES),
+)
+def test_simulated_slowdown_at_least_one(case, cfg, shape):
+    dims, chips = case
+    plan = plan_model(
+        cfg, chips, pod=TorusFabric.tpu(dims), shape=shape,
+        simulate_top_k=10**9,  # every row
+    )
+    for cand in plan.table:
+        assert cand.simulated_slowdown >= 1.0 - 1e-9
+
+
+def test_analytic_default_is_one():
+    plan = plan_model(TINY_MOE, 8, pod=TorusFabric.tpu((4, 2)), shape="train_4k")
+    assert all(c.simulated_slowdown == 1.0 for c in plan.table)
+
+
+# ---------------------------------------------------------------------------
+# Rule enumeration and budgets.
+# ---------------------------------------------------------------------------
+def test_enumerate_rules_divisibility():
+    rules = enumerate_rules(TINY_MOE, 8)
+    assert rules  # tiny model: everything fits, nothing filtered
+    seen = set()
+    for r in rules:
+        d, f, t, e = r.axis_sizes
+        assert d * f * t * e == 8
+        assert TINY_MOE.n_heads % t == 0
+        assert TINY_MOE.moe.num_experts % e == 0
+        assert r.axis_sizes not in seen
+        seen.add(r.axis_sizes)
+    assert [r.axis_sizes for r in rules] == [r for r in reference_rules(TINY_MOE, 8)]
+
+
+def test_enumerate_rules_memory_filter():
+    big = ArchConfig(
+        name="big-dense", family="dense", n_layers=80, d_model=8192,
+        n_heads=64, n_kv_heads=8, d_ff=28672, vocab_size=128256,
+    )
+    rules = enumerate_rules(big, 16)
+    shard_bytes = 2.0 * big.param_count()
+    for r in rules:
+        d, f, t, e = r.axis_sizes
+        assert shard_bytes / (f * t * e) <= 16e9
+
+
+def test_default_chip_budget_monotone():
+    assert default_chip_budget(TINY_DENSE) == 4
+    big = ArchConfig(
+        name="big", family="dense", n_layers=96, d_model=18432, n_heads=96,
+        n_kv_heads=8, d_ff=73728, vocab_size=256000,
+    )
+    assert default_chip_budget(big) >= 32
+
+
+def test_rule_traffic_axes_subset():
+    for rule_axes in [(8, 1, 1, 1), (1, 8, 1, 1), (2, 2, 2, 1), (1, 1, 2, 4)]:
+        entries = rule_traffic(TINY_MOE, SHAPES["train_4k"], rule_axes)
+        sizes = dict(zip(AXES, rule_axes))
+        for axis, collective, vol in entries:
+            assert sizes[axis] > 1
+            assert collective in COLLECTIVE_TIME
+            assert vol > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler and mesh wiring.
+# ---------------------------------------------------------------------------
+def test_to_request_carries_geometry_through_policies():
+    plan = plan_model(TINY_MOE, 8, pod=TorusFabric.tpu((4, 4)), shape="train_4k")
+    req = plan.to_request(job_id=3)
+    assert req.units == 8
+    assert req.geometry == plan.geometry
+    for policy in (IsoperimetricPolicy(), HintedPolicy(), ContentionScoredPolicy()):
+        machine = MachineState((4, 4))
+        prefs = policy.preferences_for(machine, req)
+        assert prefs[0] == plan.geometry
+        placed = policy.allocate(machine, req)
+        assert placed is not None and placed.geometry == plan.geometry
+
+
+def test_job_request_geometry_validation():
+    with pytest.raises(ValueError):
+        JobRequest(1, 8, geometry=(3, 3))
+    req = JobRequest(1, 8, geometry=(2, 4))
+    assert req.geometry == (4, 2)  # canonicalised
+
+
+def test_plan_slice_planner_backed():
+    plan = plan_slice(8, pod=TorusFabric.tpu((4, 4)), arch="mixtral-8x7b")
+    assert plan.slice_plan is not None
+    assert plan.slice_geometry == plan.slice_plan.geometry
+    assert plan.slice_plan.best.step_time == plan.slice_plan.table[0].step_time
+    # planner-backed logical axes come from the winning sharding rule
+    assert set(plan.assignment.axis_names) <= set(AXES)
+    assert plan_slice(8, pod=TorusFabric.tpu((4, 4))).slice_plan is None
+
+
+def test_plan_slice_planner_backed_occupancy():
+    pod = TorusFabric.tpu((4, 4))
+    state = MachineState((4, 4))
+    first = plan_slice(8, pod=pod, state=state, job_id=1, arch="mixtral-8x7b")
+    second = plan_slice(8, pod=pod, state=state, job_id=2, arch="mixtral-8x7b")
+    assert first.placement is not None and second.placement is not None
+    assert state.grid.sum() == 16
+
+
+def test_plan_fleet_and_format():
+    plans = plan_fleet([TINY_DENSE, TINY_MOE], chips=4, pod=TorusFabric.tpu((4, 2)))
+    assert [p.arch for p in plans] == ["tiny-dense", "tiny-moe"]
+    text = format_table(plans[1], top=3)
+    assert "tiny-moe" in text and "geometry" in text
+
+
+def test_bisection_efficiency_and_ranking_fields():
+    plan = plan_model(TINY_MOE, 8, pod=TorusFabric.tpu((4, 4)), shape="train_4k")
+    keys = [c.sort_key() for c in plan.table]
+    assert keys == sorted(keys)
+    for cand in plan.table:
+        assert 0.0 < cand.bisection_efficiency <= 1.0
+        assert cand.step_time >= max(cand.compute_time, cand.memory_time)
+    assert any(np.isclose(c.bisection_efficiency, 1.0) for c in plan.table)
+
+
+# ---------------------------------------------------------------------------
+# The example walk-through runs end to end over all registered archs.
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_fleet_planner_example_end_to_end():
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    from repro.configs import all_archs
+
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(repo / "examples" / "fleet_planner.py")],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    n = len(all_archs())
+    assert f"all {n} plans verified" in proc.stdout
+    assert proc.stdout.count("comm reproduced standalone") == n

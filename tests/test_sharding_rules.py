@@ -102,3 +102,45 @@ def test_pure_dp_layout_no_duplicate_axes():
         assert len(flat) == len(set(flat)), spec  # no duplicate mesh axes
         used |= set(flat)
     assert used  # moments are actually sharded
+
+# ---------------------------------------------------------------------------
+# Constructor + spec validation (the planner's sharding-rule contract).
+# ---------------------------------------------------------------------------
+from repro.distributed.sharding import validate_partition_spec  # noqa: E402
+
+
+def test_unknown_fsdp_axis_rejected():
+    arch = get_arch("rwkv6-3b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    with pytest.raises(ValueError, match="fsdp"):
+        ShardingRules(arch, mesh, fsdp_axes=("data", "replica"))
+
+
+def test_model_axis_in_fsdp_axes_rejected():
+    arch = get_arch("rwkv6-3b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    with pytest.raises(ValueError, match="model"):
+        ShardingRules(arch, mesh, fsdp_axes=("data", "model"), model_axis="model")
+
+
+def test_duplicate_fsdp_axes_rejected():
+    arch = get_arch("rwkv6-3b")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    with pytest.raises(ValueError, match="repeat"):
+        ShardingRules(arch, mesh, fsdp_axes=("data", "data"))
+
+
+def test_validate_partition_spec_accepts_valid():
+    validate_partition_spec(["data", "model", None], FakeMesh({"data": 4, "model": 8}))
+    validate_partition_spec([("data", "model"), None], {"data": 4, "model": 8})
+    validate_partition_spec([None, None], ["data", "model"])
+
+
+def test_validate_partition_spec_rejects_absent_axis():
+    with pytest.raises(ValueError, match="absent"):
+        validate_partition_spec(["data", "expert"], {"data": 4, "model": 8})
+
+
+def test_validate_partition_spec_rejects_reused_axis():
+    with pytest.raises(ValueError, match="reuse|more than once|duplicate"):
+        validate_partition_spec(["model", ("data", "model")], {"data": 4, "model": 8})

@@ -46,6 +46,8 @@ AUDITED_MODULES = [
     "repro.network.scheduler",
     "repro.network.mapping",
     "repro.network.backend",
+    "repro.launch.planner",
+    "repro.distributed.sharding",
     "repro.utils.env",
 ]
 # TorusFabric + simulate_queue + map_ranks + the isoperimetry engine
