@@ -8,9 +8,13 @@ Options:
 * ``--only NAME`` (repeatable) — run just the named benchmark(s); unknown
   names fail fast with the list of valid ones.
 * ``--check`` — validate previously emitted ``BENCH_*.json`` files
-  against their speedup gates (the ``BENCH_*_MIN_SPEEDUP`` environment
-  variables, default 10) without re-running anything; useful for
-  auditing CI artifacts.
+  against their gates (speedup floors via ``BENCH_*_MIN_SPEEDUP``,
+  default 10; overhead ceilings via ``BENCH_*_MAX_OVERHEAD``, default
+  0.02) without re-running anything; useful for auditing CI artifacts.
+  Prints a one-line summary table of every gate.
+* ``--require-all`` — with ``--check``, a missing artifact is a failure
+  instead of a skip (CI runs the full benchmark set, so a missing file
+  means a benchmark silently did not run).
 """
 
 from __future__ import annotations
@@ -38,6 +42,7 @@ from benchmarks.bench_backend import backend_microbench
 from benchmarks.bench_isoperimetry import isoperimetry_microbench
 from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_netsim import netsim_microbench
+from benchmarks.bench_obs import obs_microbench
 from benchmarks.bench_planner import planner_microbench
 from benchmarks.bench_routing import routing_microbench
 from benchmarks.bench_scheduler import scheduler_microbench
@@ -61,50 +66,83 @@ BENCHMARKS = [
     ("backend_microbench", backend_microbench),
     ("scheduler_microbench", scheduler_microbench),
     ("planner_microbench", planner_microbench),
+    ("obs_microbench", obs_microbench),
     ("roofline_table", roofline_table),
     ("dryrun_matrix", dryrun_matrix),
 ]
 
-# Gated micro-benchmarks: emitted JSON file and the environment variable
-# that (optionally) relaxes the 10x acceptance bar — the registry --check
-# audits artifacts against.
+# Gated micro-benchmarks: (emitted JSON file, relaxing environment
+# variable, gate kind) — the registry --check audits artifacts against.
+# ``min_speedup`` gates floor every ``speedup`` row field (default 10x);
+# ``max_overhead`` gates ceil every ``overhead_fraction`` row field
+# (default 0.02, i.e. <= 2%).
 GATED = {
-    "routing_microbench": ("BENCH_routing.json", "BENCH_ROUTING_MIN_SPEEDUP"),
-    "allocation_microbench": ("BENCH_allocation.json", "BENCH_ALLOCATION_MIN_SPEEDUP"),
-    "mapping_microbench": ("BENCH_mapping.json", "BENCH_MAPPING_MIN_SPEEDUP"),
-    "netsim_microbench": ("BENCH_netsim.json", "BENCH_NETSIM_MIN_SPEEDUP"),
-    "isoperimetry_microbench": ("BENCH_isoperimetry.json", "BENCH_ISOPERIMETRY_MIN_SPEEDUP"),
-    "backend_microbench": ("BENCH_backend.json", "BENCH_BACKEND_MIN_SPEEDUP"),
-    "scheduler_microbench": ("BENCH_scheduler.json", "BENCH_SCHEDULER_MIN_SPEEDUP"),
-    "planner_microbench": ("BENCH_planner.json", "BENCH_PLANNER_MIN_SPEEDUP"),
+    "routing_microbench": ("BENCH_routing.json", "BENCH_ROUTING_MIN_SPEEDUP", "min_speedup"),
+    "allocation_microbench": ("BENCH_allocation.json", "BENCH_ALLOCATION_MIN_SPEEDUP", "min_speedup"),
+    "mapping_microbench": ("BENCH_mapping.json", "BENCH_MAPPING_MIN_SPEEDUP", "min_speedup"),
+    "netsim_microbench": ("BENCH_netsim.json", "BENCH_NETSIM_MIN_SPEEDUP", "min_speedup"),
+    "isoperimetry_microbench": ("BENCH_isoperimetry.json", "BENCH_ISOPERIMETRY_MIN_SPEEDUP", "min_speedup"),
+    "backend_microbench": ("BENCH_backend.json", "BENCH_BACKEND_MIN_SPEEDUP", "min_speedup"),
+    "scheduler_microbench": ("BENCH_scheduler.json", "BENCH_SCHEDULER_MIN_SPEEDUP", "min_speedup"),
+    "planner_microbench": ("BENCH_planner.json", "BENCH_PLANNER_MIN_SPEEDUP", "min_speedup"),
+    "obs_microbench": ("BENCH_obs.json", "BENCH_OBS_MAX_OVERHEAD", "max_overhead"),
 }
 
+_GATE_DEFAULTS = {"min_speedup": "10", "max_overhead": "0.02"}
+_GATE_FIELDS = {"min_speedup": "speedup", "max_overhead": "overhead_fraction"}
 
-def check_artifacts(search_dir: Path) -> int:
-    """Validate emitted ``BENCH_*.json`` files against their speedup gates
-    without re-running: every ``speedup`` field in every row must meet the
-    benchmark's ``BENCH_*_MIN_SPEEDUP`` (default 10).  Missing files are
-    reported but not fatal (a partial artifact set is auditable); a
-    present file below its gate is.  Returns the number of failures."""
+
+def check_artifacts(search_dir: Path, require_all: bool = False) -> int:
+    """Validate emitted ``BENCH_*.json`` files against their gates without
+    re-running: ``min_speedup`` benchmarks must have every ``speedup`` row
+    field at or above the gate, ``max_overhead`` ones every
+    ``overhead_fraction`` at or below it.  Missing files are reported but
+    not fatal unless ``require_all`` (a partial artifact set is auditable;
+    a CI run of the full set is not allowed silent gaps).  Prints a
+    one-line-per-gate summary table and returns the number of failures."""
     failures = 0
-    for name, (fname, env_var) in sorted(GATED.items()):
-        gate = float(os.environ.get(env_var, "10"))
+    summary = []
+    for name, (fname, env_var, kind) in sorted(GATED.items()):
+        gate = float(os.environ.get(env_var, _GATE_DEFAULTS[kind]))
+        field = _GATE_FIELDS[kind]
         path = search_dir / fname
         if not path.exists():
-            print(f"{name}: {fname} missing — skipped")
+            if require_all:
+                print(f"{name}: {fname} missing — FAILED (--require-all)")
+                failures += 1
+                summary.append((name, kind, gate, None, "MISSING"))
+            else:
+                print(f"{name}: {fname} missing — skipped")
+                summary.append((name, kind, gate, None, "skipped"))
             continue
         data = json.loads(path.read_text())
-        speedups = [r["speedup"] for r in data.get("rows", []) if "speedup" in r]
-        if not speedups:
-            print(f"{name}: {fname} has no speedup rows — FAILED")
+        values = [r[field] for r in data.get("rows", []) if field in r]
+        if not values:
+            print(f"{name}: {fname} has no {field} rows — FAILED")
             failures += 1
+            summary.append((name, kind, gate, None, "FAILED"))
             continue
-        worst = min(speedups)
-        ok = worst >= gate
-        print(f"{name}: worst speedup {worst:.1f}x vs gate {gate:g}x — "
-              f"{'ok' if ok else 'FAILED'}")
+        if kind == "min_speedup":
+            worst = min(values)
+            ok = worst >= gate
+            print(f"{name}: worst speedup {worst:.1f}x vs gate {gate:g}x — "
+                  f"{'ok' if ok else 'FAILED'}")
+        else:
+            worst = max(values)
+            ok = worst <= gate
+            print(f"{name}: worst overhead {worst:.3%} vs gate {gate:.0%} — "
+                  f"{'ok' if ok else 'FAILED'}")
         if not ok:
             failures += 1
+        summary.append((name, kind, gate, worst, "ok" if ok else "FAILED"))
+    print()
+    print(f"{'benchmark':<26} {'gate':>18} {'worst':>12} {'status':>8}")
+    for name, kind, gate, worst, status in summary:
+        bound = f">= {gate:g}x" if kind == "min_speedup" else f"<= {gate:.0%}"
+        shown = "-" if worst is None else (
+            f"{worst:.1f}x" if kind == "min_speedup" else f"{worst:.3%}"
+        )
+        print(f"{name:<26} {bound:>18} {shown:>12} {status:>8}")
     return failures
 
 
@@ -122,10 +160,14 @@ def main() -> None:
         "--check-dir", default=".", metavar="DIR",
         help="directory holding the BENCH_*.json artifacts (default: cwd)",
     )
+    ap.add_argument(
+        "--require-all", action="store_true",
+        help="with --check: fail on missing artifacts instead of skipping",
+    )
     args = ap.parse_args()
 
     if args.check:
-        failures = check_artifacts(Path(args.check_dir))
+        failures = check_artifacts(Path(args.check_dir), args.require_all)
         if failures:
             raise SystemExit(f"{failures} benchmark artifact(s) below gate")
         return

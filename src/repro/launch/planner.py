@@ -74,6 +74,7 @@ from repro.network.isoperimetry import ranked_geometries, scaled_node_dims
 from repro.network.mapping import RankMapping, map_ranks
 from repro.network.netsim import simulate_traffic
 from repro.network.routing import predict_pairing_time
+from repro.obs.trace import TRACER as _TRACER
 
 __all__ = [
     "AXES",
@@ -449,7 +450,34 @@ def price_candidate(
     * pairing time — the node-level stress volume times
       ``predict_pairing_time(node_dims).time_per_volume`` (equal to the
       netsim makespan of ``bisection_pairing(node_dims)`` at unit volume).
+
+    When :mod:`repro.obs` tracing is enabled each pricing emits a
+    ``planner.price`` span annotated with the fabric geometry, rule name,
+    and whether the rule embedded.
     """
+    if not _TRACER.enabled:
+        return _price_candidate_impl(
+            cfg, shape, fabric, node_dims, n_compute, rule, backend
+        )
+    with _TRACER.span(
+        "planner.price", fabric=tuple(fabric.dims), rule=tuple(rule.axis_sizes)
+    ) as sp:
+        priced = _price_candidate_impl(
+            cfg, shape, fabric, node_dims, n_compute, rule, backend
+        )
+        sp.annotate(embedded=priced is not None)
+        return priced
+
+
+def _price_candidate_impl(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    fabric: TorusFabric,
+    node_dims: Geometry,
+    n_compute: int,
+    rule: ShardingRuleSet,
+    backend: Optional[str] = None,
+) -> Optional[Tuple[Optional[RankMapping], AxisAssignment, Tuple, float, float, float, float, float]]:
     chips = fabric.num_chips
     entries = rule_traffic(cfg, shape, rule.axis_sizes)
     pair_chip = pairing_stress_volume(entries, rule.axis_sizes)

@@ -10,13 +10,13 @@ the dry-run (decode_32k / long_500k cells lower ``decode_step``).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.obs import timer as obs_timer
 from repro.models import build_model
 from repro.train import make_decode_step
 
@@ -62,27 +62,27 @@ def main(argv=None):
     prompts = rng.integers(0, arch.vocab_size, (B, args.prompt_len), dtype=np.int32)
 
     # prefill via teacher-forced decode (exact cache population)
-    t0 = time.perf_counter()
     logits = None
-    for t in range(args.prompt_len):
-        logits, cache = decode(
-            params, cache, {"tokens": jnp.asarray(prompts[:, t : t + 1])}, jnp.array(t)
-        )
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    with obs_timer("serve.prefill", requests=B, tokens=args.prompt_len) as tm:
+        for t in range(args.prompt_len):
+            logits, cache = decode(
+                params, cache, {"tokens": jnp.asarray(prompts[:, t : t + 1])}, jnp.array(t)
+            )
+        jax.block_until_ready(logits)
+    t_prefill = tm.elapsed
 
     # batched greedy decode
     out_tokens = []
     tok = jnp.argmax(logits[:, -1, : arch.vocab_size], axis=-1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    for i in range(args.gen_len):
-        out_tokens.append(np.asarray(tok))
-        logits, cache = decode(
-            params, cache, {"tokens": tok}, jnp.array(args.prompt_len + i)
-        )
-        tok = jnp.argmax(logits[:, -1, : arch.vocab_size], axis=-1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    with obs_timer("serve.decode", requests=B, tokens=args.gen_len) as tm:
+        for i in range(args.gen_len):
+            out_tokens.append(np.asarray(tok))
+            logits, cache = decode(
+                params, cache, {"tokens": tok}, jnp.array(args.prompt_len + i)
+            )
+            tok = jnp.argmax(logits[:, -1, : arch.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+    t_decode = tm.elapsed
 
     gen = np.concatenate(out_tokens, axis=1)
     tps = B * args.gen_len / t_decode

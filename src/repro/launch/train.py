@@ -16,7 +16,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import time
 from pathlib import Path
 
 import jax
@@ -27,6 +26,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
 from repro.data import DataConfig, DataPipeline
 from repro.models import build_model
+from repro.obs import timer as obs_timer
 from repro.optim import AdamWConfig, adamw
 from repro.optim import compression as comp
 from repro.runtime import HeartbeatMonitor, StragglerTracker
@@ -109,11 +109,11 @@ def main(argv=None):
                     print(f"[fault] restored checkpoint step {restored_step}")
                 monitor.rejoin("w0")
                 args.simulate_failure_at = None  # don't loop
-            t0 = time.perf_counter()
-            jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, metrics = step_fn(params, opt_state, jbatch)
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
+            with obs_timer("train.step", step=step) as tm:
+                jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+                loss = float(metrics["loss"])
+            dt = tm.elapsed
             straggler.record("w0", dt)
             losses.append(loss)
             if args.compress != "none":

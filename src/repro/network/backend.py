@@ -54,6 +54,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.metrics import REGISTRY as _METRICS
+from ..obs.trace import TRACER as _TRACER
 from .geometry import volume
 from ..utils.env import have_jax
 
@@ -127,6 +129,35 @@ def resolve_backend(backend: Optional[str] = None) -> str:
 
 def _next_pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# First-touch jit signatures, for the compile-vs-execute telemetry split:
+# a dispatch whose (function, static args, padded shapes) signature is new
+# triggers an XLA compile, so its span is annotated phase="compile" and
+# the ``backend.jit_compiles`` counter increments; repeat signatures are
+# phase="execute".  (lru_cache eviction can re-compile a signature seen
+# long ago — the counter tracks first touches, the steady-state measure.)
+_JIT_SIGNATURES: set = set()
+
+
+def _dispatch(name: str, sig: tuple, call, **annotations):
+    """Run one compiled-backend dispatch with telemetry: jit-compile /
+    dispatch counters in :data:`repro.obs.REGISTRY` (always on — one dict
+    update per coarse call) and a ``backend.<name>`` span with the
+    compile-vs-execute phase when tracing is enabled."""
+    compiling = sig not in _JIT_SIGNATURES
+    if compiling:
+        _JIT_SIGNATURES.add(sig)
+        _METRICS.counter("backend.jit_compiles", fn=name).incr()
+    _METRICS.counter("backend.dispatches", fn=name).incr()
+    if not _TRACER.enabled:
+        return call()
+    with _TRACER.span(
+        f"backend.{name}",
+        phase="compile" if compiling else "execute",
+        **annotations,
+    ):
+        return call()
 
 
 # ---------------------------------------------------------------------------
@@ -235,7 +266,14 @@ def xla_route_loads(
         dst = np.concatenate([dst, np.zeros((pad, D), dtype=np.int64)])
         vol = np.concatenate([vol, np.zeros(pad)])
     fn = _route_loads_fn(dims, bool(split_ties))
-    return np.asarray(fn(src, dst, vol))
+    _METRICS.counter("backend.padding_bucket", bucket=Mp).incr()
+    return _dispatch(
+        "route_loads",
+        ("route_loads", dims, bool(split_ties), Mp),
+        lambda: np.asarray(fn(src, dst, vol)),
+        messages=M,
+        bucket=Mp,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -407,9 +445,23 @@ def drain(
     if plan.n_flows == 0 or plan.n_links_used == 0 or not active0.any():
         return np.zeros(plan.n_flows), 0
     fn = _drain_fn()
-    fc, steps, unfinished = fn(
-        plan.lf, plan.fl, plan.cap, v, active0,
-        max_iters=plan.max_iters, max_steps=int(max_steps),
+    fc, steps, unfinished = _dispatch(
+        "drain",
+        (
+            "drain",
+            plan.n_flows,
+            plan.n_links_used,
+            tuple(int(s) for s in plan.lf.shape),
+            tuple(int(s) for s in plan.fl.shape),
+            plan.max_iters,
+            int(max_steps),
+        ),
+        lambda: fn(
+            plan.lf, plan.fl, plan.cap, v, active0,
+            max_iters=plan.max_iters, max_steps=int(max_steps),
+        ),
+        flows=plan.n_flows,
+        links=plan.n_links_used,
     )
     if bool(unfinished):
         raise RuntimeError(f"flow simulation exceeded {max_steps} steps")
@@ -552,7 +604,20 @@ def score_candidates(
             dil[i] = s.dilation
         return cong, dil
     fn = _score_fn(dims, bool(split_ties), bool(double_link_on_2))
-    cong, dil = fn(coords, rsrc, rdst, vol)
+    cong, dil = _dispatch(
+        "score_candidates",
+        (
+            "score_candidates",
+            dims,
+            bool(split_ties),
+            bool(double_link_on_2),
+            B,
+            coords.shape[1],
+            int(rsrc.shape[0]),
+        ),
+        lambda: fn(coords, rsrc, rdst, vol),
+        candidates=B,
+    )
     return np.asarray(cong), np.asarray(dil)
 
 
@@ -587,7 +652,11 @@ def xla_contention_field(
 
     J = base_loads(dims, tuple(int(w) for w in oriented))
     fn = _contention_fn(len(dims))
-    return np.asarray(fn(np.asarray(mask, dtype=np.float64), J))
+    return _dispatch(
+        "contention_field",
+        ("contention_field", dims),
+        lambda: np.asarray(fn(np.asarray(mask, dtype=np.float64), J)),
+    )
 
 
 # ---------------------------------------------------------------------------

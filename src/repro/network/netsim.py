@@ -67,6 +67,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.trace import TRACER as _TRACER
 from .backend import resolve_backend
 from .geometry import volume
 from .routing import max_link_load
@@ -568,6 +569,10 @@ def simulate_flows(
 ) -> FlowSimResult:
     """Drain a routed pattern under max-min fair link sharing.
 
+    With tracing enabled (:mod:`repro.obs`) the drain records a
+    ``netsim.drain`` span annotated with the flow count, step count, and
+    makespan; results are bit-identical either way (spans only measure).
+
     Each step computes fair rates over the link x flow incidence
     (:func:`_max_min_rates`), advances time to the next subflow
     completion, and removes drained subflows; the step count is therefore
@@ -583,6 +588,31 @@ def simulate_flows(
     within 1e-9 relative of the numpy engine.  The timeline sweep is a
     host-side diagnostic, so ``record_utilization=True`` is numpy-only.
     """
+    if not _TRACER.enabled:
+        return _simulate_flows_impl(
+            paths, link_bw, double_link_on_2, record_utilization, max_steps, backend
+        )
+    with _TRACER.span(
+        "netsim.drain",
+        flows=paths.n_flows,
+        mode=paths.mode,
+        backend=resolve_backend(backend),
+    ) as span:
+        res = _simulate_flows_impl(
+            paths, link_bw, double_link_on_2, record_utilization, max_steps, backend
+        )
+        span.annotate(steps=res.steps, makespan=res.makespan)
+        return res
+
+
+def _simulate_flows_impl(
+    paths: FlowPaths,
+    link_bw: float,
+    double_link_on_2: bool,
+    record_utilization: bool,
+    max_steps: int,
+    backend: Optional[str],
+) -> FlowSimResult:
     if link_bw <= 0.0:
         raise ValueError("link_bw must be positive")
     if resolve_backend(backend) == "xla":

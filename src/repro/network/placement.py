@@ -54,6 +54,7 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.trace import TRACER as _TRACER
 from .backend import resolve_backend
 from .geometry import Geometry, bisection_links, canonical
 
@@ -497,7 +498,32 @@ def best_placement(
     ``background_loads`` is the (D, 2, *dims) load tensor of the existing
     placements' traffic (see :func:`placement_loads`); None or all-zero
     makes contention vanish and the choice purely contact-driven.
+
+    With tracing enabled (:mod:`repro.obs`) the search records a
+    ``placement.search`` span annotated with the winning orientation /
+    offset / contention; the choice is identical either way.
     """
+    if not _TRACER.enabled:
+        return _best_placement_impl(grid, geometry, background_loads, backend)
+    with _TRACER.span(
+        "placement.search", geometry=tuple(int(g) for g in geometry)
+    ) as span:
+        out = _best_placement_impl(grid, geometry, background_loads, backend)
+        if out is not None:
+            span.annotate(
+                oriented=out.oriented, offset=out.offset, contention=out.contention
+            )
+        else:
+            span.annotate(placed=False)
+        return out
+
+
+def _best_placement_impl(
+    grid: np.ndarray,
+    geometry: Sequence[int],
+    background_loads: Optional[np.ndarray],
+    backend: Optional[str],
+) -> Optional[ScoredPlacement]:
     dims = grid.shape
     bis = bisection_links(pad_geometry(geometry, len(dims)))
     mask = interference_mask(grid, background_loads)

@@ -64,12 +64,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-import time as _time
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from ..obs.trace import TRACER as _TRACER
 from ..runtime.fault_tolerance import HeartbeatMonitor, failure_cells
 from .allocation import (
     AllocationPolicy,
@@ -329,9 +329,20 @@ class SchedulerService:
                 if not batch:
                     break
                 batch.sort(key=lambda e: (e[1], e[2]))
-                for _, _, _, kind, data in batch:
-                    self._apply(kind, data)
-                self._schedule()
+                # Spans only *measure* — the event application and the
+                # scheduling pass are identical either way (non-perturbation
+                # is pinned in tests/test_obs.py).
+                if _TRACER.enabled:
+                    with _TRACER.span(
+                        "scheduler.step", t=self.now, events=len(batch)
+                    ):
+                        for _, _, _, kind, data in batch:
+                            self._apply(kind, data)
+                        self._schedule()
+                else:
+                    for _, _, _, kind, data in batch:
+                        self._apply(kind, data)
+                    self._schedule()
         if until is not None and until > self.now:
             self.now = until
         return self
@@ -507,7 +518,14 @@ class SchedulerService:
         request = queued.request
         if request.job_id in self._live:
             raise ValueError(f"job {request.job_id} is already running")
-        placed = self.policy.allocate(self.machine, request)
+        if _TRACER.enabled:
+            with _TRACER.span(
+                "scheduler.place", job=request.job_id, units=request.units
+            ) as _sp:
+                placed = self.policy.allocate(self.machine, request)
+                _sp.annotate(placed=placed is not None)
+        else:
+            placed = self.policy.allocate(self.machine, request)
         if placed is None:
             return False
         node_dims = scaled_node_dims(placed.geometry, self.unit_node_dims)
@@ -759,8 +777,11 @@ def scheduler_throughput(
     scenario: Scenario, policy: AllocationPolicy, **service_kwargs
 ) -> Tuple[SchedulerService, float]:
     """Run a scenario and return ``(service, events_per_second)`` — the
-    benchmarked quantity of ``BENCH_scheduler.json``."""
-    t0 = _time.perf_counter()
-    service = run_scenario(scenario, policy, **service_kwargs)
-    elapsed = _time.perf_counter() - t0
-    return service, service.events_processed / max(elapsed, 1e-9)
+    benchmarked quantity of ``BENCH_scheduler.json``.  Timed through an
+    :class:`repro.obs.Timer`, so with tracing enabled the scenario's
+    wall clock lands in the trace stream alongside the per-event spans."""
+    with _TRACER.timer(
+        "scheduler.scenario", jobs=len(scenario.jobs), dims=scenario.machine_dims
+    ) as t:
+        service = run_scenario(scenario, policy, **service_kwargs)
+    return service, service.events_processed / max(t.elapsed, 1e-9)

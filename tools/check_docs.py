@@ -49,6 +49,10 @@ AUDITED_MODULES = [
     "repro.launch.planner",
     "repro.distributed.sharding",
     "repro.utils.env",
+    "repro.obs",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.contention",
 ]
 # TorusFabric + simulate_queue + map_ranks + the isoperimetry engine
 # (cut_table / optimal_cuboid / advise_partition) examples at minimum.
