@@ -1,0 +1,106 @@
+"""HyperX routing-engine micro-benchmark: vectorized vs per-hop walker.
+
+Acceptance benchmark for the fabric-interface refactor: an all-to-all on
+``H(8, 8)`` routed through the vectorized ``route_hyperx`` engine must
+produce *identical* per-link loads to the per-hop Python reference
+(``tests/reference_hyperx.py``), match the closed-form max load, and be
+>= 10x faster.
+
+Run standalone (writes BENCH_hyperx.json):
+
+    PYTHONPATH=src python benchmarks/bench_hyperx.py [--json PATH]
+
+or via the harness (`PYTHONPATH=src python -m benchmarks.run`), which
+registers :func:`hyperx_microbench`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.network import (
+    HyperXFabric,
+    hyperx_all_to_all_max_load,
+    hyperx_max_link_load,
+    patterns,
+    route_hyperx,
+)
+
+_REPO = Path(__file__).resolve().parents[1]
+
+DIMS = (8, 8)
+# 10x is the refactor's acceptance bar; BENCH_HYPERX_MIN_SPEEDUP lets loaded
+# CI runners relax the timing gate without weakening the load-identity check.
+TARGET_SPEEDUP = float(os.environ.get("BENCH_HYPERX_MIN_SPEEDUP", "10"))
+
+
+def _reference_oracle():
+    """Import the per-hop walker lazily — it lives with the tests, and the
+    harness must not mutate sys.path unless this benchmark actually runs."""
+    tests_dir = str(_REPO / "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from reference_hyperx import oracle_minimal_loads
+
+    return oracle_minimal_loads
+
+
+def _time_vectorized(fab, src, dst, vol, repeats: int = 5) -> Tuple[float, np.ndarray]:
+    best = float("inf")
+    loads = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        loads = route_hyperx(fab, src, dst, vol, mode="minimal")
+        best = min(best, time.perf_counter() - t0)
+    return best, loads
+
+
+def hyperx_microbench() -> Tuple[List[dict], str]:
+    fab = HyperXFabric(DIMS)
+    src, dst, vol = patterns.all_to_all(DIMS)
+    t_fast, loads_fast = _time_vectorized(fab, src, dst, vol)
+    oracle = _reference_oracle()  # import outside the timed region
+    t0 = time.perf_counter()
+    loads_slow = oracle(fab, src, dst, vol)
+    t_slow = time.perf_counter() - t0
+    speedup = t_slow / t_fast
+    np.testing.assert_array_equal(loads_fast, loads_slow)
+    max_load = hyperx_max_link_load(fab, loads_fast)
+    closed_form = hyperx_all_to_all_max_load(fab)
+    assert abs(max_load - closed_form) < 1e-9, (max_load, closed_form)
+    assert speedup >= TARGET_SPEEDUP, f"speedup {speedup:.1f}x < {TARGET_SPEEDUP}x"
+    rows = [
+        {
+            "dims": list(DIMS),
+            "pattern": "all-to-all",
+            "messages": int(len(vol)),
+            "vectorized_s": round(t_fast, 4),
+            "walker_s": round(t_slow, 4),
+            "speedup": round(speedup, 1),
+            "max_link_load": max_load,
+            "closed_form_load": closed_form,
+        }
+    ]
+    return rows, f"speedup={speedup:.0f}x,max_load={max_load:g}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_hyperx.json", help="output path")
+    args = ap.parse_args()
+    rows, derived = hyperx_microbench()
+    out = Path(args.json)
+    out.write_text(json.dumps({"benchmark": "hyperx_microbench", "rows": rows}, indent=1))
+    print(f"hyperx_microbench: {derived} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,7 @@ from benchmarks.paper_tables import (
 )
 from benchmarks.bench_allocation import allocation_microbench
 from benchmarks.bench_backend import backend_microbench
+from benchmarks.bench_hyperx import hyperx_microbench
 from benchmarks.bench_isoperimetry import isoperimetry_microbench
 from benchmarks.bench_mapping import mapping_microbench
 from benchmarks.bench_netsim import netsim_microbench
@@ -59,6 +60,7 @@ BENCHMARKS = [
     ("fig6_strong_scaling", fig6_strong_scaling),
     ("tpu_slice_geometry", tpu_slice_geometry),
     ("routing_microbench", routing_microbench),
+    ("hyperx_microbench", hyperx_microbench),
     ("allocation_microbench", allocation_microbench),
     ("mapping_microbench", mapping_microbench),
     ("netsim_microbench", netsim_microbench),
@@ -78,6 +80,7 @@ BENCHMARKS = [
 # (default 0.02, i.e. <= 2%).
 GATED = {
     "routing_microbench": ("BENCH_routing.json", "BENCH_ROUTING_MIN_SPEEDUP", "min_speedup"),
+    "hyperx_microbench": ("BENCH_hyperx.json", "BENCH_HYPERX_MIN_SPEEDUP", "min_speedup"),
     "allocation_microbench": ("BENCH_allocation.json", "BENCH_ALLOCATION_MIN_SPEEDUP", "min_speedup"),
     "mapping_microbench": ("BENCH_mapping.json", "BENCH_MAPPING_MIN_SPEEDUP", "min_speedup"),
     "netsim_microbench": ("BENCH_netsim.json", "BENCH_NETSIM_MIN_SPEEDUP", "min_speedup"),

@@ -1,0 +1,204 @@
+"""The paper's Sections 5-7 study rerun on a HyperX machine.
+
+    PYTHONPATH=src python examples/hyperx_analysis.py
+
+Cano et al. (PAPERS.md) pose the paper's edge-isoperimetric question on
+Hamming graphs — per-dimension cliques instead of rings — and the answer
+*flips*: an aligned box's cut ``t * sum_k K_k (S_k - c_k)`` falls as a
+side grows, so covering a whole dimension is unbeatable and *elongated*
+partitions minimise internal contention, the exact opposite of the torus
+preference the Mira/JUQUEEN tables pin.  This walk-through derives that
+end to end on ``H(16, 4)``: the ranked bisection table, the certified
+partition advisor, the flow-simulated worst/best gap, what DAL routing
+recovers (and cannot recover), the allocation-policy queue replay, the
+planner on a HyperX pod, and the structural zero of cross-box contention.
+
+Every headline number is golden-pinned with asserts, so CI running this
+example is a regression gate, like the Mira/JUQUEEN tables.
+"""
+
+import os
+
+import numpy as np
+
+from repro.launch.planner import format_table, plan_model
+from repro.network import (
+    HyperXFabric,
+    IsoperimetricPolicy,
+    JobRequest,
+    ListPolicy,
+    MachineState,
+    advise_partition,
+    bisection_table,
+    compare_fabric_routing,
+    hyperx_all_to_all_max_load,
+    optimal_cuboid,
+    simulate_fabric_traffic,
+    simulate_queue,
+)
+from repro.network.patterns import all_to_all, bisection_pairing, hotspot_line
+from repro.obs.contention import attribute_contention, render_dashboard
+
+POD = HyperXFabric((16, 4))
+UNITS = 16
+
+
+# ---------------------------------------------------------------------------
+# Section 5 analogue: geometry ranking by internal bisection.
+# ---------------------------------------------------------------------------
+print(f"== H{POD.dims} bisection table, {UNITS}-unit boxes (Lindsey-exact) ==")
+ranked = bisection_table(POD, UNITS).ranked()
+for g, bis in ranked:
+    sub = POD.sub_fabric(g)
+    print(
+        f"  {str(g):>8}: bisection {bis:3d} links   "
+        f"all-to-all max load {hyperx_all_to_all_max_load(sub):5.1f}"
+    )
+assert ranked == [((16, 1), 64), ((4, 4), 16), ((8, 2), 8)], ranked
+print(
+    "  -> the elongated (16, 1) line wins: covering a dimension removes it\n"
+    "     from the bottleneck — the OPPOSITE of the torus preference"
+)
+
+opt = optimal_cuboid(POD, UNITS)
+assert (opt.geometry, opt.cut, opt.bound, opt.tight) == ((16, 1), 48, 48, True)
+print(
+    f"  optimal cuboid {opt.geometry}: cut {opt.cut} == Lindsey bound "
+    f"{opt.bound:.0f} [certified tight]"
+)
+
+
+# ---------------------------------------------------------------------------
+# Section 6 analogue: the partition advisor, certified and simulated.
+# ---------------------------------------------------------------------------
+print(f"\n== Partition advisor: worst {UNITS}-unit geometry vs optimum ==")
+adv = advise_partition(POD, UNITS, (8, 2), simulate=True)
+print(
+    f"  current (8, 2) bisection {adv.current_bisection} -> optimal "
+    f"{adv.optimal_geometry} bisection {adv.optimal_bisection}\n"
+    f"  predicted speedup x{adv.predicted_speedup:.1f}  "
+    f"simulated x{adv.simulated_speedup:.1f}  certified={adv.certified}"
+)
+assert adv.optimal_geometry == (16, 1)
+assert adv.certified and not adv.is_current_optimal
+assert adv.predicted_speedup == 8.0 and adv.simulated_speedup == 8.0
+
+
+# ---------------------------------------------------------------------------
+# Section 7 analogue: predicted == simulated on the steady pattern, and the
+# worst/best netsim gap.
+# ---------------------------------------------------------------------------
+print("\n== Flow-simulated all-to-all per geometry (netsim over fabric.links) ==")
+makespans = {}
+for g, _ in ranked:
+    sub = POD.sub_fabric(g)
+    sim = simulate_fabric_traffic(sub, all_to_all(sub.dims))
+    pred = hyperx_all_to_all_max_load(sub)
+    makespans[g] = sim.makespan
+    assert sim.makespan == pred, (g, sim.makespan, pred)
+    print(f"  {str(g):>8}: predicted x{pred:5.1f}  simulated x{sim.makespan:5.1f}")
+gap = makespans[(8, 2)] / makespans[(16, 1)]
+assert gap == 8.0
+print(f"  -> worst/best simulated gap x{gap:.1f} (>= 1.5: geometry dominates)")
+
+
+print("\n== What DAL routing recovers (minimal vs dimension-adaptive) ==")
+pairing_cmp = compare_fabric_routing(POD, bisection_pairing(POD.dims))
+hotspot_cmp = compare_fabric_routing(POD, hotspot_line(POD.dims))
+print(
+    f"  pairing on H{POD.dims}: makespan {pairing_cmp.dor_makespan:.2f} -> "
+    f"{pairing_cmp.adaptive_makespan:.2f}, recovered "
+    f"{100 * pairing_cmp.recovered_fraction:.0f}% "
+    f"(steady pattern: routing cannot help — fix the partition)"
+)
+print(
+    f"  hotspot line:      makespan {hotspot_cmp.dor_makespan:.2f} -> "
+    f"{hotspot_cmp.adaptive_makespan:.2f}, recovered "
+    f"{100 * hotspot_cmp.recovered_fraction:.0f}% "
+    f"(skew-induced contention: routing helps)"
+)
+assert pairing_cmp.recovered_fraction == 0.0
+assert hotspot_cmp.dor_makespan == 2.0
+assert abs(hotspot_cmp.recovered_fraction - 2.0 / 7.0) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# The allocation-policy queue replay (Section 6's Table-6 setting).
+# ---------------------------------------------------------------------------
+def policy_replay(n_jobs: int, seed: int = 0):
+    """Synthetic workload on H(16, 4): the isoperimetric policy (elongated
+    boxes on HyperX) vs Mira-style fixed compact geometries."""
+    rng = np.random.default_rng(seed)
+    sizes = np.array([4, 8, 16])
+    compact = ListPolicy({4: (2, 2), 8: (4, 2), 16: (4, 4)})
+    rows = []
+    size = rng.choice(sizes, size=n_jobs)
+    arrival = np.cumsum(rng.exponential(0.3, size=n_jobs))
+    duration = rng.lognormal(mean=0.0, sigma=0.5, size=n_jobs) + 0.3
+    jobs = [
+        JobRequest(i, int(size[i]), True, float(duration[i]), float(arrival[i]))
+        for i in range(n_jobs)
+    ]
+    for pol in (IsoperimetricPolicy(), compact):
+        res = simulate_queue(POD, jobs, pol, backfill=True)
+        rows.append(
+            {
+                "policy": res.policy,
+                "scheduled": len(res.jobs),
+                "rejected": len(res.rejected),
+                "mean_comm_time": res.mean_comm_time,
+                "makespan": res.makespan,
+            }
+        )
+    return rows
+
+
+n_jobs = int(os.environ.get("REPLAY_JOBS", "200"))
+print(f"\n== H{POD.dims} queue replay ({n_jobs} jobs, arrivals + EASY backfill) ==")
+rows = policy_replay(n_jobs)
+for r in rows:
+    print(
+        f"  {r['policy']:>14}: scheduled {r['scheduled']:4d}  "
+        f"rejected {r['rejected']:3d}  comm {r['mean_comm_time']:.3f}  "
+        f"makespan {r['makespan']:.1f}"
+    )
+iso, compact = rows
+avoidable = compact["mean_comm_time"] / iso["mean_comm_time"]
+print(
+    f"  -> compact geometries cost x{avoidable:.2f} predicted comm time: "
+    f"the avoidable contention an elongated-box policy removes on HyperX"
+)
+# The exact multiple depends on the size mix (x2 for 4-unit boxes up to x8
+# for 16-unit ones); any mix must land strictly above 1.
+assert avoidable >= 1.2, avoidable
+
+
+# ---------------------------------------------------------------------------
+# Cross-box contention is structurally zero (box closure).
+# ---------------------------------------------------------------------------
+print("\n== Per-job contention attribution (obs dashboard) ==")
+machine = MachineState(POD)
+machine.allocate(1, (16, 1))
+machine.allocate(2, (8, 2))
+report = attribute_contention(machine)
+print(render_dashboard(report))
+for job in report.jobs:
+    assert job.cross_load == 0.0, job
+print(
+    "  -> cross-box load is exactly zero for every job: minimal/DAL paths\n"
+    "     never leave an aligned box, so placement isolation is structural\n"
+    "     on HyperX (no electrical partitioning needed)"
+)
+
+
+# ---------------------------------------------------------------------------
+# The planner on a HyperX pod.
+# ---------------------------------------------------------------------------
+print("\n== Fleet planner on the HyperX pod ==")
+plan = plan_model("mixtral-8x7b", UNITS, pod=POD, shape="decode_32k",
+                  simulate_top_k=1)
+print(format_table(plan, top=4))
+assert plan.best.simulated_slowdown >= 1.0
+assert {c.geometry for c in plan.table} == {(16, 1), (8, 2), (4, 4)}
+
+print("\nAll HyperX goldens hold.")

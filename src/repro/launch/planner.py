@@ -68,11 +68,16 @@ from repro.network.collectives import (
     CollectiveCostModel,
     assign_axes,
 )
-from repro.network.fabric import TorusFabric, ranked_slice_geometries, slice_fabric
+from repro.network.fabric import (
+    HyperXFabric,
+    TorusFabric,
+    ranked_slice_geometries,
+    slice_fabric,
+)
 from repro.network.geometry import Geometry, canonical, volume
 from repro.network.isoperimetry import ranked_geometries, scaled_node_dims
 from repro.network.mapping import RankMapping, map_ranks
-from repro.network.netsim import simulate_traffic
+from repro.network.netsim import simulate_fabric_traffic, simulate_traffic
 from repro.network.routing import predict_pairing_time
 from repro.obs.trace import TRACER as _TRACER
 
@@ -371,7 +376,7 @@ class PlanCandidate:
     geometry_rank: int  # index in the bisection-ranked geometry list
     bisection_links: int
     bisection_efficiency: float  # this geometry's bisection / best rankable
-    fabric: TorusFabric
+    fabric: Union[TorusFabric, HyperXFabric]
     rule: ShardingRuleSet
     mapping: Optional[RankMapping]
     assignment: AxisAssignment
@@ -434,7 +439,7 @@ def _decode_cache_bytes(cfg: ArchConfig, shape: ShapeConfig) -> float:
 def price_candidate(
     cfg: ArchConfig,
     shape: ShapeConfig,
-    fabric: TorusFabric,
+    fabric: Union[TorusFabric, HyperXFabric],
     node_dims: Geometry,
     n_compute: int,
     rule: ShardingRuleSet,
@@ -469,16 +474,35 @@ def price_candidate(
         return priced
 
 
+def _ring_equivalent(fabric: HyperXFabric) -> TorusFabric:
+    """Wrapped-torus stand-in for pricing ring schedules on a HyperX box.
+
+    A ring pass along one dim of a clique uses one direct link per hop
+    stage, exactly like a fully-wrapped torus dim — so ring-collective
+    times on ``H(S)`` equal those on the wrapped torus of the same dims
+    with per-link bandwidth ``K_k * link_bw`` (exact when the trunking is
+    uniform; the min-multiplicity floor makes the price conservative
+    otherwise).  ``double_link_on_2=False`` because a size-2 clique dim
+    has its ``K_k`` trunked links already counted in the bandwidth scale,
+    not the torus's two parallel wrap links.
+    """
+    bw = fabric.link_bw * min(fabric.link_multiplicity)
+    return TorusFabric(
+        fabric.dims, (True,) * len(fabric.dims), bw, double_link_on_2=False
+    )
+
+
 def _price_candidate_impl(
     cfg: ArchConfig,
     shape: ShapeConfig,
-    fabric: TorusFabric,
+    fabric: Union[TorusFabric, HyperXFabric],
     node_dims: Geometry,
     n_compute: int,
     rule: ShardingRuleSet,
     backend: Optional[str] = None,
 ) -> Optional[Tuple[Optional[RankMapping], AxisAssignment, Tuple, float, float, float, float, float]]:
     chips = fabric.num_chips
+    ring_fab = _ring_equivalent(fabric) if isinstance(fabric, HyperXFabric) else fabric
     entries = rule_traffic(cfg, shape, rule.axis_sizes)
     pair_chip = pairing_stress_volume(entries, rule.axis_sizes)
     traffic = rule_rank_traffic(rule.axis_sizes, entries, pair_chip)
@@ -487,21 +511,21 @@ def _price_candidate_impl(
     try:
         if traffic is not None:
             mapping = map_ranks(
-                fabric.dims,
-                fabric.dims,
+                ring_fab.dims,
+                ring_fab.dims,
                 logical_dims=tuple(rule.axis_sizes),
                 traffic=traffic,
-                double_link_on_2=fabric.double_link_on_2,
+                double_link_on_2=ring_fab.double_link_on_2,
                 refine=False,  # the catalogue is oracle-enumerable; greedy
-                wrap=fabric.wrap,  # refinement is seeded local search
+                wrap=ring_fab.wrap,  # refinement is seeded local search
                 backend=backend,
             )
         assignment = assign_axes(
-            fabric, mesh_shape, order_hint=rule.order_hint, mapping=mapping
+            ring_fab, mesh_shape, order_hint=rule.order_hint, mapping=mapping
         )
     except ValueError:
         return None  # rule does not embed in this geometry
-    cost_model = CollectiveCostModel(fabric, assignment)
+    cost_model = CollectiveCostModel(ring_fab, assignment)
     ring_time = 0.0
     for axis, collective, vol in entries:
         ring_time += cost_model.time(collective, axis, vol)
@@ -509,7 +533,17 @@ def _price_candidate_impl(
     # (identity on chip-level fabrics where volume(node_dims) == chips).
     pair_node = pair_chip * chips / volume(node_dims)
     pairing_time = 0.0
-    if pair_node > 0.0:
+    if pair_node > 0.0 and isinstance(fabric, HyperXFabric):
+        # Halving-doubling partners differ in one coordinate of the split
+        # dim, so every pair has its own direct clique link: max link load
+        # is 1 and the exchange drains in one contention-free stage over a
+        # K_k-trunked link (netsim measures exactly this; see
+        # tests/test_hyperx.py).
+        sides = fabric.dims
+        if max(sides) > 1:
+            k = max(range(len(sides)), key=lambda i: sides[i])
+            pairing_time = pair_node / (fabric.link_bw * fabric.link_multiplicity[k])
+    elif pair_node > 0.0:
         pred = predict_pairing_time(
             node_dims, 1.0, fabric.link_bw,
             double_link_on_2=fabric.double_link_on_2,
@@ -596,7 +630,7 @@ def plan_model(
     arch: Union[str, ArchConfig],
     chips: Optional[int] = None,
     *,
-    pod: Optional[TorusFabric] = None,
+    pod: Optional[Union[TorusFabric, HyperXFabric]] = None,
     shape: Union[str, ShapeConfig] = "decode_32k",
     wrap_mode: str = "slice",
     unit_node_dims: Optional[Sequence[int]] = None,
@@ -616,12 +650,32 @@ def plan_model(
     through the flow simulator and records the measured contention
     multiplier on ``simulated_slowdown`` (1.0 analytic default —
     tier-1 tests keep k=0 so no netsim runs on the hot path).
+
+    A :class:`~repro.network.fabric.HyperXFabric` pod is also accepted.
+    There the slice/torus wrap distinction collapses — an aligned sub-box
+    of a clique dimension is itself a clique, so every partition has full
+    wrap along every dim regardless of where it sits — and both
+    ``wrap_mode`` values rank the same Lindsey-exact bisection table
+    (:func:`repro.network.isoperimetry.ranked_geometries` on the fabric).
+    ``unit_node_dims`` node scaling is the Blue Gene/Q torus convention
+    and is rejected on HyperX pods.
     """
     cfg = arch if isinstance(arch, ArchConfig) else get_arch(arch)
     shape_cfg = shape if isinstance(shape, ShapeConfig) else SHAPES[shape]
     pod = pod or _default_pod()
     budget = chips if chips is not None else min(default_chip_budget(cfg), pod.num_chips)
-    if wrap_mode == "slice":
+    if isinstance(pod, HyperXFabric):
+        if wrap_mode not in ("slice", "torus"):
+            raise ValueError(f"wrap_mode must be 'slice' or 'torus', got {wrap_mode!r}")
+        if unit_node_dims is not None:
+            raise ValueError(
+                "unit_node_dims is the BG/Q torus node-scaling convention; "
+                "HyperX pods plan over allocation-unit boxes directly"
+            )
+        ranked = ranked_geometries(pod, budget)
+        fabrics = [(g, bis, pod.sub_fabric(g)) for g, bis in ranked]
+        nodes = [fab.dims for _, _, fab in fabrics]
+    elif wrap_mode == "slice":
         ranked = ranked_slice_geometries(pod, budget)
         fabrics = [(g, bis, slice_fabric(pod, g)) for g, bis in ranked]
         nodes = [fab.dims for _, _, fab in fabrics]
@@ -694,6 +748,11 @@ def _simulate(cand: PlanCandidate) -> float:
     src, dst, vol = cand.mapping.machine_traffic()
     if len(vol) == 0 or float(np.sum(vol)) <= 0.0:
         return 1.0
+    if isinstance(cand.fabric, HyperXFabric):
+        sim = simulate_fabric_traffic(
+            cand.fabric, (src, dst, vol), link_bw=cand.fabric.link_bw
+        )
+        return max(1.0, float(sim.slowdown))
     sim = simulate_traffic(
         cand.fabric.dims, (src, dst, vol),
         link_bw=cand.fabric.link_bw,

@@ -1,4 +1,4 @@
-"""repro.network — the unified torus fabric modeling subsystem.
+"""repro.network — the unified fabric modeling subsystem.
 
 Single home of every geometry / fabric / routing primitive in the repo
 (see DESIGN.md):
@@ -9,12 +9,20 @@ Single home of every geometry / fabric / routing primitive in the repo
                 same-volume geometry via divisor meshgrids, Theorem 2.1/3.1
                 bounds with tightness certificates, bisection tables, and
                 the partition advisor (current-policy vs optimal geometry
-                with predicted + simulated speedups).
-  fabric      — the unified TorusFabric (per-dimension wrap flags, BG/Q
-                double-link vs TPU single-link conventions), Torus compat
+                with predicted + simulated speedups); fabric-dispatching
+                (Hamming cut closed forms + Lindsey bisections on HyperX).
+  fabric      — the abstract Fabric interface (explicit ``links()``
+                incidence tables) with TorusFabric (per-dimension wrap
+                flags, BG/Q double-link vs TPU single-link conventions)
+                and HyperXFabric (Hamming graph: per-dim cliques with
+                trunked link multiplicities) implementations, Torus compat
                 wrapper, slice planning.
+  hamming     — Hamming-graph edge-isoperimetry closed forms: aligned-box
+                cuts, Lindsey lex bound, packed-edges fallback, exact
+                bisections.
   routing     — vectorized NumPy DOR link-load engine, closed-form
-                translation-invariant fast paths, pairing predictions.
+                translation-invariant fast paths, pairing predictions;
+                HyperX minimal + DAL routing behind ``route_pattern``.
   patterns    — traffic-pattern library (bisection pairing, all-to-all,
                 halo exchange, ring collectives, permutations, transpose).
   netsim      — vectorized flow-level simulator: max-min fair link
@@ -101,6 +109,9 @@ from .isoperimetry import (
 from .fabric import (
     DEFAULT_LINK_BW,
     POD_DCI_BW,
+    Fabric,
+    HyperXFabric,
+    LinkTable,
     Torus,
     TorusFabric,
     best_slice_geometry,
@@ -108,14 +119,25 @@ from .fabric import (
     slice_fabric,
     worst_slice_geometry,
 )
+from .hamming import (
+    hamming_bisection_links,
+    hamming_cut_aligned,
+    hamming_cut_of_set,
+    hamming_subset_bound,
+    lindsey_bound,
+)
 from .routing import (
     LinkLoads,
     PairingPrediction,
     all_to_all_max_load,
+    hyperx_all_to_all_max_load,
+    hyperx_max_link_load,
     max_link_load,
     pairing_speedup,
     predict_pairing_time,
     route_dor,
+    route_hyperx,
+    route_pattern,
     simulate_pattern,
     uniform_offset_max_load,
 )
@@ -143,9 +165,12 @@ from .netsim import (
     UtilizationSample,
     adaptive_paths,
     build_paths,
+    compare_fabric_routing,
     compare_routing,
     dor_paths,
+    fabric_paths,
     link_capacities,
+    simulate_fabric_traffic,
     simulate_flows,
     simulate_phases,
     simulate_traffic,

@@ -49,6 +49,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .fabric import HyperXFabric, TorusFabric
 from .geometry import Geometry, bisection_links, canonical, sub_cuboids
 from .isoperimetry import ranked_geometries, scaled_node_dims
 from .mapping import RankMapping, map_ranks
@@ -133,7 +134,16 @@ class MachineState:
     """
 
     def __init__(self, dims: Sequence[int], backend: Optional[str] = None):
-        self.dims = tuple(int(d) for d in dims)
+        # Accepts plain allocation-unit dims (torus semantics, historical
+        # default) or a Fabric.  HyperX occupancy uses the same grid: a
+        # clique dimension is invariant under coordinate relabeling, so a
+        # wrapped translate of a box is just another valid aligned box.
+        if isinstance(dims, (TorusFabric, HyperXFabric)):
+            self.fabric: Optional[object] = dims
+            self.dims = dims.dims
+        else:
+            self.fabric = None
+            self.dims = tuple(int(d) for d in dims)
         self.grid = np.zeros(self.dims, dtype=bool)
         self.placements: Dict[int, Placement] = {}
         # Exact accumulator: per placement size n, the int64 sum of the
@@ -148,6 +158,19 @@ class MachineState:
     @property
     def free_units(self) -> int:
         return int((~self.grid).sum())
+
+    @property
+    def fabric_or_dims(self):
+        """The fabric this machine was built from, or its plain dims — the
+        value fabric-dispatching engines (isoperimetry, routing) accept."""
+        return self.fabric if self.fabric is not None else self.dims
+
+    def _geometry_bisection(self, geometry: Geometry) -> int:
+        """Internal bisection of a canonical geometry under this machine's
+        fabric convention (Hamming sub-box on HyperX, wrapped torus else)."""
+        if isinstance(self.fabric, HyperXFabric):
+            return self.fabric.sub_fabric(geometry).bisection_links()
+        return bisection_links(geometry)
 
     def cells(self, oriented: Sequence[int], offset: Coord) -> Tuple[np.ndarray, ...]:
         return placement_cells(self.dims, oriented, offset)
@@ -191,6 +214,13 @@ class MachineState:
         -contention background of that job (callers previously subtracted
         the float field after the fact and relied on the residue staying
         under the sharing threshold)."""
+        if isinstance(self.fabric, HyperXFabric):
+            raise TypeError(
+                "traffic_loads is the torus-routed background field; on a "
+                "HyperX fabric disjoint aligned boxes share no links (every "
+                "minimal path stays inside its own box), so there is no "
+                "cross-placement background to maintain"
+            )
         if exclude is not None:
             p = self.placements[exclude]
             return self._recombine(
@@ -218,7 +248,9 @@ class MachineState:
             oriented=oriented,
             offset=offset,
             bisection_links=(
-                bisection_links(canonical(geometry)) if bisection is None else bisection
+                self._geometry_bisection(canonical(geometry))
+                if bisection is None
+                else bisection
             ),
             predicted_contention=predicted_contention,
         )
@@ -243,7 +275,14 @@ class MachineState:
         return self._commit(job_id, geometry, oriented, offset)
 
     def allocate_scored(self, job_id: int, geometry: Sequence[int]) -> Optional[Placement]:
-        """Contention/contact-scored allocation of one geometry."""
+        """Contention/contact-scored allocation of one geometry.
+
+        On a HyperX machine placement scoring is vacuous — minimal (and
+        DAL) paths of an aligned box never leave the box's own links, so
+        every free translate predicts exactly zero shared-link contention
+        — and this degrades to first-fit with a 0.0 score."""
+        if isinstance(self.fabric, HyperXFabric):
+            return self.allocate(job_id, geometry)
         cand: Optional[ScoredPlacement] = best_placement(
             self.grid, geometry, self.traffic_loads(), backend=self.backend
         )
@@ -370,7 +409,7 @@ class IsoperimetricPolicy(AllocationPolicy):
 
     def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
         try:
-            return [g for g, _ in ranked_geometries(machine.dims, units)]
+            return [g for g, _ in ranked_geometries(machine.fabric_or_dims, units)]
         except ValueError:
             return []  # no cuboid of this size fits (matches the old empty sort)
 
@@ -444,7 +483,7 @@ class ContentionScoredPolicy(AllocationPolicy):
 
     def geometry_preferences(self, machine: MachineState, units: int) -> List[Geometry]:
         try:
-            ranked = ranked_geometries(machine.dims, units)
+            ranked = ranked_geometries(machine.fabric_or_dims, units)
         except ValueError:
             return []
         if self.min_bisection_efficiency > 0.0 and ranked[0][1] > 0:
@@ -630,6 +669,16 @@ def simulate_queue(
     ``"simulated"`` contention drains (identical schedules either way;
     see :mod:`repro.network.backend`).
 
+    ``machine_dims`` may also be a :class:`~repro.network.fabric.
+    TorusFabric` or :class:`~repro.network.fabric.HyperXFabric`; placements
+    and bisection accounting then follow that fabric's convention.  The
+    contention models are torus replays (on HyperX, disjoint aligned
+    boxes structurally share no links — see
+    :meth:`MachineState.allocate_scored`), so ``contention``/
+    ``measure_contention``/``mapping_pattern`` raise ``ValueError`` on a
+    HyperX machine instead of measuring a structural zero with torus
+    routing.
+
     Example (two 4-midplane jobs on a tiny torus, FCFS, no backfill):
 
     >>> jobs = [JobRequest(0, 4, duration=1.0), JobRequest(1, 4, duration=1.0)]
@@ -654,7 +703,19 @@ def simulate_queue(
     # measurements ride on the service's start/release hooks.
     from .scheduler import SchedulerService
 
-    dims = tuple(int(d) for d in machine_dims)
+    fabric = (
+        machine_dims
+        if isinstance(machine_dims, (TorusFabric, HyperXFabric))
+        else None
+    )
+    dims = fabric.dims if fabric is not None else tuple(int(d) for d in machine_dims)
+    if isinstance(fabric, HyperXFabric) and (measure or mapping_pattern is not None):
+        raise ValueError(
+            "contention measurement replays torus routing; on a HyperX "
+            "machine disjoint boxes share no links, so there is nothing to "
+            "measure — run without contention=/measure_contention/"
+            "mapping_pattern"
+        )
 
     # Live per-job *mapped* loads (mapping_pattern only): the measured
     # shared-link background under a mapping is the running sum of these,
@@ -737,7 +798,7 @@ def simulate_queue(
         live_traffic.pop(job_id, None)
 
     service = SchedulerService(
-        dims,
+        fabric if fabric is not None else dims,
         policy,
         unit_node_dims=unit_node_dims,
         link_bw=link_bw,

@@ -314,7 +314,13 @@ def prepare_drain(paths, link_bw: float = 1.0, double_link_on_2: bool = True) ->
     if link_bw <= 0.0:
         raise ValueError("link_bw must be positive")
     _, jnp = _jax()
-    capfull = link_capacities(paths.dims, link_bw, double_link_on_2).ravel()
+    if getattr(paths, "capacities", None) is not None:
+        # Explicit-capacity fabrics (HyperX) carry their own dense slot
+        # capacities in units of link_bw; the torus double-link rule does
+        # not apply to them.
+        capfull = np.asarray(paths.capacities, dtype=np.float64) * link_bw
+    else:
+        capfull = link_capacities(paths.dims, link_bw, double_link_on_2).ravel()
     F = paths.n_flows
     link = paths.link_ids
     flow = paths.flow_ids

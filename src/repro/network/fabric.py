@@ -24,11 +24,14 @@ Hardware conventions (see DESIGN.md):
 
 from __future__ import annotations
 
+import abc
 import math
 from dataclasses import dataclass
 from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
-from . import geometry
+import numpy as np
+
+from . import geometry, hamming
 from .geometry import Geometry, canonical, volume
 
 # TPU v5e-class constants (per chip / per link, bytes per second).
@@ -36,8 +39,82 @@ DEFAULT_LINK_BW = 50e9  # ~50 GB/s per ICI link per direction (prompt spec)
 POD_DCI_BW = 12.5e9  # inter-pod (data-center network) per-chip share, est.
 
 
+# ---------------------------------------------------------------------------
+# The fabric interface: explicit link incidence + per-dimension structure.
+# ---------------------------------------------------------------------------
 @dataclass(frozen=True)
-class TorusFabric:
+class LinkTable:
+    """Explicit directed-link incidence of a fabric.
+
+    Parallel arrays: ``link[i]`` is the flat link id (an index into the
+    fabric's dense id space of ``n_slots`` slots — some slots may be
+    unused, e.g. length-1 torus dimensions), ``src[i]``/``dst[i]`` the
+    endpoint cells as flat C-order indices into the cell grid, and
+    ``capacity[i]`` the link bandwidth in bytes/s (parallel physical
+    links — BG/Q double links, HyperX trunking — fold into capacity).
+    """
+
+    link: np.ndarray  # (L,) int64 flat link ids, unique
+    src: np.ndarray  # (L,) int64 source cell (flat C-order)
+    dst: np.ndarray  # (L,) int64 destination cell (flat C-order)
+    capacity: np.ndarray  # (L,) float bytes/s
+    n_slots: int  # size of the dense link-id space
+
+    def __len__(self) -> int:
+        return int(self.link.shape[0])
+
+    def dense_capacities(self) -> np.ndarray:
+        """Per-slot capacities (bytes/s), zero on unused slots — the
+        vector :func:`repro.network.netsim.fabric_paths` waterfills over."""
+        cap = np.zeros(self.n_slots, dtype=np.float64)
+        cap[self.link] = self.capacity
+        return cap
+
+    def neighbors_of(self, cell: int) -> np.ndarray:
+        """Sorted unique flat cell indices one link away from ``cell``."""
+        return np.unique(self.dst[self.src == int(cell)])
+
+
+class Fabric(abc.ABC):
+    """Abstract interconnect fabric: cells joined by capacitated links.
+
+    The contract every engine above routing programs against: a dense
+    cell grid of per-dimension sizes ``dims`` (cuboid placement and the
+    occupancy machinery need per-dim structure), an explicit link
+    incidence (:meth:`links` — netsim builds its link x flow waterfilling
+    from it), neighbor queries, and an internal-bisection figure.
+    Implementations: :class:`TorusFabric` (rings per dimension) and
+    :class:`HyperXFabric` (a clique per dimension — the Hamming graph).
+    """
+
+    dims: Tuple[int, ...]
+    link_bw: float
+
+    @property
+    def num_cells(self) -> int:
+        """Number of cells (allocation units) in the fabric."""
+        return volume(self.dims)
+
+    @property
+    def dim_sizes(self) -> Tuple[int, ...]:
+        """Per-dimension cell counts (the placement grid's shape)."""
+        return tuple(self.dims)
+
+    @abc.abstractmethod
+    def links(self) -> LinkTable:
+        """The explicit ``(link, src_cell, dst_cell, capacity)`` table."""
+
+    @abc.abstractmethod
+    def bisection_links(self) -> int:
+        """Internal bisection of the fabric in (unit-capacity) links."""
+
+    def neighbors(self, cell: int) -> np.ndarray:
+        """Flat cell indices adjacent to ``cell`` (sorted, unique)."""
+        return self.links().neighbors_of(cell)
+
+
+@dataclass(frozen=True)
+class TorusFabric(Fabric):
     """A physical torus (or mesh) fabric: a machine, a pod, or a slice.
 
     ``dims`` are chip/midplane counts per dimension, ``wrap`` flags the
@@ -139,6 +216,43 @@ class TorusFabric:
         """All canonical cuboid geometries of ``size`` units that fit."""
         return geometry.sub_cuboids(self.dims, size)
 
+    # -- the Fabric interface --------------------------------------------------
+    def links(self) -> LinkTable:
+        """Directed ring links, ids matching the flattened ``(D, 2, *dims)``
+        load-tensor layout of :func:`repro.network.routing.route_dor` (slot
+        ``(k * 2 + direction) * N + cell``).  Length-1 dimensions carry no
+        links (their slots stay unused); a length-2 dimension's two
+        parallel physical links (BG/Q) fold into doubled capacity, exactly
+        mirroring :func:`repro.network.netsim.link_capacities`.  ``wrap``
+        affects bisection accounting, not the routed incidence — DOR
+        always routes the full ring, matching ``route_dor``.
+        """
+        dims = self.dims
+        n = self.num_cells
+        d = len(dims)
+        cells = np.arange(n, dtype=np.int64)
+        coords = np.stack(np.unravel_index(cells, dims), axis=1) if d else cells[:, None]
+        link, src, dst, cap = [], [], [], []
+        for k, a in enumerate(dims):
+            if a <= 1:
+                continue
+            c = 2.0 * self.link_bw if (a == 2 and self.double_link_on_2) else self.link_bw
+            for direction, step in ((0, 1), (1, -1)):
+                nb = coords.copy()
+                nb[:, k] = (nb[:, k] + step) % a
+                link.append((k * 2 + direction) * n + cells)
+                src.append(cells)
+                dst.append(np.ravel_multi_index(tuple(nb.T), dims))
+                cap.append(np.full(n, c))
+        empty = np.zeros(0, dtype=np.int64)
+        return LinkTable(
+            link=np.concatenate(link) if link else empty,
+            src=np.concatenate(src) if src else empty.copy(),
+            dst=np.concatenate(dst) if dst else empty.copy(),
+            capacity=np.concatenate(cap) if cap else np.zeros(0),
+            n_slots=2 * d * n,
+        )
+
 
 @dataclass(frozen=True)
 class Torus:
@@ -194,14 +308,162 @@ class Torus:
 
 
 # ---------------------------------------------------------------------------
+# HyperX: a clique per dimension (the Hamming graph H(S_1, ..., S_D)).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HyperXFabric(Fabric):
+    """A HyperX fabric: per-dimension diameter-1 all-to-all wiring.
+
+    Every cell connects directly to every other cell of each of its
+    dimension lines (the Hamming graph — Ahn et al.'s HyperX; Cano et
+    al.'s resource-allocation setting), with an optional per-dimension
+    link multiplicity ``K_k`` (trunked parallel links fold into
+    capacity).  Cut structure is the *opposite* of a torus: covering a
+    dimension removes its whole cut contribution, so elongated boxes have
+    the largest internal bisection (see :mod:`repro.network.hamming`).
+
+    >>> hx = HyperXFabric((16, 4))
+    >>> hx.num_cells, hx.degree, hx.bisection_links()
+    (64, 18, 64)
+    >>> hx.sub_fabric((4, 4)).bisection_links()  # compact box: 4x worse
+    16
+    """
+
+    dims: Tuple[int, ...]
+    link_multiplicity: Optional[Tuple[int, ...]] = None  # K_k, default all 1
+    link_bw: float = DEFAULT_LINK_BW  # bytes/s per (single) link per direction
+
+    def __post_init__(self):
+        object.__setattr__(self, "dims", tuple(int(a) for a in self.dims))
+        if any(a < 1 for a in self.dims):
+            raise ValueError(f"dims must be >= 1, got {self.dims}")
+        mult = self.link_multiplicity
+        mult = (1,) * len(self.dims) if mult is None else tuple(int(k) for k in mult)
+        if len(mult) != len(self.dims) or any(k < 1 for k in mult):
+            raise ValueError(
+                f"link_multiplicity {self.link_multiplicity} must be one "
+                f"positive entry per dim of {self.dims}"
+            )
+        object.__setattr__(self, "link_multiplicity", mult)
+
+    # -- basic quantities ------------------------------------------------------
+    @property
+    def num_chips(self) -> int:
+        """Alias of :attr:`Fabric.num_cells` (fabric-API symmetry)."""
+        return self.num_cells
+
+    @property
+    def num_vertices(self) -> int:
+        """Alias of :attr:`Fabric.num_cells` for graph-flavoured callers."""
+        return self.num_cells
+
+    @property
+    def degree(self) -> int:
+        """Links per cell: ``sum_k K_k * (S_k - 1)``."""
+        return hamming.hamming_degree(self.dims, self.link_multiplicity)
+
+    def bisection_links(self) -> int:
+        """Exact internal bisection: the Lindsey lex half-set's cut (see
+        :func:`repro.network.hamming.hamming_bisection_links`)."""
+        return hamming.hamming_bisection_links(self.dims, self.link_multiplicity)
+
+    def bisection_bandwidth(self) -> float:
+        """Bytes/s across the bisection, both directions of each link."""
+        return 2.0 * self.bisection_links() * self.link_bw
+
+    def contains_cuboid(self, cuboid: Sequence[int]) -> bool:
+        """Whether an aligned box with these sides fits (up to rotation) —
+        any ``c_k <= S_k`` subset of coordinates spans a valid sub-box in
+        a clique dimension, so this is the sorted-containment test."""
+        return geometry.contains_cuboid(self.dims, cuboid)
+
+    # -- the Fabric interface --------------------------------------------------
+    def links(self) -> LinkTable:
+        """Directed clique links.  Dense id layout: dimension k occupies
+        the slot block ``N * sum_{i<k} S_i``, and the link from cell
+        ``u`` to destination coordinate ``j`` in dim k has slot
+        ``block_k + flat(u) * S_k + j`` — the ``j == u_k`` self-slots
+        stay unused.  Capacity is ``K_k * link_bw`` (trunking folds in).
+        """
+        dims = self.dims
+        n = self.num_cells
+        cells = np.arange(n, dtype=np.int64)
+        coords = np.stack(np.unravel_index(cells, dims), axis=1)
+        link, src, dst, cap = [], [], [], []
+        base = 0
+        for k, a in enumerate(dims):
+            if a > 1:
+                for j in range(a):
+                    take = coords[:, k] != j
+                    nb = coords[take].copy()
+                    nb[:, k] = j
+                    link.append(base + cells[take] * a + j)
+                    src.append(cells[take])
+                    dst.append(np.ravel_multi_index(tuple(nb.T), dims))
+                    cap.append(
+                        np.full(int(take.sum()), self.link_multiplicity[k] * self.link_bw)
+                    )
+            base += n * a
+        empty = np.zeros(0, dtype=np.int64)
+        return LinkTable(
+            link=np.concatenate(link) if link else empty,
+            src=np.concatenate(src) if src else empty.copy(),
+            dst=np.concatenate(dst) if dst else empty.copy(),
+            capacity=np.concatenate(cap) if cap else np.zeros(0),
+            n_slots=n * sum(dims),
+        )
+
+    def sub_fabric(self, sides: Sequence[int]) -> "HyperXFabric":
+        """The fabric of an aligned sub-box: any ``c_k``-subset of a
+        clique dimension is itself a ``K_{c_k}`` clique, so a HyperX
+        sub-box is the Hamming graph ``H(c)`` — wrap semantics never
+        enter (contrast :func:`slice_fabric`).  Sides match machine
+        dimensions tightest-fit and inherit their multiplicities.
+        """
+        g = canonical(sides)
+        g = g + (1,) * (len(self.dims) - len(g))
+        if len(g) > len(self.dims):
+            raise ValueError(f"sub-box {g} has more dims than fabric {self.dims}")
+        avail = sorted(range(len(self.dims)), key=lambda i: self.dims[i])
+        used = set()
+        out_dims, out_mult = [], []
+        for side in g:
+            pick = None
+            for i in avail:
+                if i not in used and self.dims[i] >= side:
+                    pick = i
+                    break
+            if pick is None:
+                raise ValueError(f"sub-box {g} does not fit in fabric {self.dims}")
+            used.add(pick)
+            out_dims.append(side)
+            out_mult.append(self.link_multiplicity[pick])
+        return HyperXFabric(tuple(out_dims), tuple(out_mult), self.link_bw)
+
+
+# ---------------------------------------------------------------------------
 # Slice planning (the paper's technique at the job level).
 # ---------------------------------------------------------------------------
+def _require_ring_fabric(pod, where: str) -> None:
+    """Slice planning computes wrap-aware torus bisections; anything
+    without per-dim ring structure (e.g. :class:`HyperXFabric`) would get
+    silently wrong geometries, so fail loudly instead."""
+    if not isinstance(pod, TorusFabric):
+        raise TypeError(
+            f"{where} requires a TorusFabric (per-dimension ring structure with "
+            f"wrap semantics); got {type(pod).__name__} — for HyperX fabrics use "
+            f"HyperXFabric.sub_fabric / repro.network.isoperimetry.ranked_geometries"
+        )
+
+
 def slice_fabric(pod: TorusFabric, geometry_: Sequence[int]) -> TorusFabric:
     """The fabric of a cuboid slice allocated from a pod.
 
     TPU semantics: wrap in a dimension only where the slice covers the full
     (wrapped) pod dimension.  Slice sides are matched to pod dims tightest-fit.
+    Raises ``TypeError`` for fabrics without per-dim ring structure.
     """
+    _require_ring_fabric(pod, "slice_fabric")
     g = canonical(geometry_)
     g = g + (1,) * (len(pod.dims) - len(g))
     if len(g) > len(pod.dims):
@@ -232,7 +494,9 @@ def ranked_slice_geometries(pod: TorusFabric, chips: int) -> List[Tuple[Geometry
     (``repro.launch.mesh.plan_slice``), so they cannot drift apart.
     Candidates come from the isoperimetry engine's batched enumeration
     (:func:`repro.network.isoperimetry.fitting_geometries`); each slice's
-    bisection stays the exact wrap-aware :func:`slice_fabric` computation."""
+    bisection stays the exact wrap-aware :func:`slice_fabric` computation.
+    Raises ``TypeError`` for fabrics without per-dim ring structure."""
+    _require_ring_fabric(pod, "ranked_slice_geometries")
     from .isoperimetry import fitting_geometries
 
     candidates = [
@@ -256,6 +520,7 @@ def best_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
 def worst_slice_geometry(pod: TorusFabric, chips: int) -> Tuple[Geometry, int]:
     """The fitting cuboid slice with *minimal* internal bisection (links) —
     the adversarial baseline of the avoidable-contention ratio."""
+    _require_ring_fabric(pod, "worst_slice_geometry")
     worst: Optional[Tuple[Geometry, int]] = None
     for g in geometry.sub_cuboids(pod.dims, chips):
         fab = slice_fabric(pod, g)

@@ -44,7 +44,9 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import hamming
 from .backend import resolve_backend
+from .fabric import HyperXFabric
 from .geometry import (
     Geometry,
     canonical,
@@ -80,7 +82,19 @@ __all__ = [
 
 
 def _dims_of(torus_or_dims) -> Geometry:
-    """Canonical dims of a ``Torus``/``TorusFabric``-like object or a tuple."""
+    """Canonical dims of a ``Torus``/``TorusFabric``-like object or a tuple.
+
+    :class:`~repro.network.fabric.HyperXFabric` also carries ``.dims`` but
+    has clique (not ring) lines — the public entry points dispatch on the
+    type *before* reaching this helper, so a HyperX fabric is never
+    silently flattened into torus dims.
+    """
+    if isinstance(torus_or_dims, HyperXFabric):
+        raise TypeError(
+            "HyperXFabric reached a torus-only code path; use the fabric-"
+            "dispatching entry points (cut_table, optimal_cuboid, "
+            "bisection_table, advise_partition, ...)"
+        )
     return canonical(getattr(torus_or_dims, "dims", torus_or_dims))
 
 
@@ -173,22 +187,43 @@ def cut_table(torus_or_dims, t: int, backend: Optional[str] = None) -> CutTable:
     backend (int64 arithmetic — identical values); the divisor enumeration
     and group-by stay host-side.
 
+    On a :class:`~repro.network.fabric.HyperXFabric` the same enumeration
+    runs with the Hamming aligned-box cut closed form
+    (:func:`repro.network.hamming.hamming_cut_aligned`, evaluated
+    host-side — the xla scorer is the torus closed form):
+
+    >>> from .fabric import HyperXFabric
+    >>> cut_table(HyperXFabric((4, 4)), 4).items()
+    [((2, 2), 16), ((4, 1), 12)]
+
     >>> cut_table((4, 4, 2), 8).items()
     [((2, 2, 2), 16), ((4, 2, 1), 16)]
     """
-    a = _dims_of(torus_or_dims)
     if t < 1:
         raise ValueError(f"t must be >= 1, got {t}")
-    S = _aligned_assignments(a, t)
-    if S.shape[0] == 0:
-        return CutTable(a, t, S.reshape(0, len(a)), np.zeros(0, dtype=np.int64))
-    av = np.array(a, dtype=np.int64)
-    if resolve_backend(backend) == "xla":
-        from .backend import xla_cut_scores
-
-        cuts = xla_cut_scores(a, S, t)
+    if isinstance(torus_or_dims, HyperXFabric):
+        fab = torus_or_dims
+        a = fab.dims
+        S = _aligned_assignments(a, t)
+        if S.shape[0] == 0:
+            return CutTable(a, t, S.reshape(0, len(a)), np.zeros(0, dtype=np.int64))
+        av = np.array(a, dtype=np.int64)
+        mult = np.array(fab.link_multiplicity, dtype=np.int64)
+        # cut of an aligned box = t * sum_k K_k (S_k - c_k): a covered
+        # dimension contributes nothing, so cuts *decrease* with side.
+        cuts = (t * mult[None, :] * (av[None, :] - S)).sum(axis=1)
     else:
-        cuts = np.where(S == av[None, :], 0, (2 * t) // S).sum(axis=1)
+        a = _dims_of(torus_or_dims)
+        S = _aligned_assignments(a, t)
+        if S.shape[0] == 0:
+            return CutTable(a, t, S.reshape(0, len(a)), np.zeros(0, dtype=np.int64))
+        av = np.array(a, dtype=np.int64)
+        if resolve_backend(backend) == "xla":
+            from .backend import xla_cut_scores
+
+            cuts = xla_cut_scores(a, S, t)
+        else:
+            cuts = np.where(S == av[None, :], 0, (2 * t) // S).sum(axis=1)
     G = -np.sort(-S, axis=1)  # canonical (descending) rows
     # Group by geometry via a positional integer key (base max(a)+1): a 1-D
     # unique on int64 keys, much cheaper than np.unique(axis=0)'s row-view
@@ -281,6 +316,19 @@ def _subset_bound(a: Geometry, n: int, t: int) -> float:
     return theorem31_bound(a, min(t, n - t))
 
 
+def _any_subset_bound(torus_or_dims, n: int, t: int) -> float:
+    """Per-fabric lower bound on any size-t subset's cut: Theorem 3.1 on a
+    torus, the Lindsey/edge-identity bound on a Hamming graph (exact for
+    uniform link multiplicity) — both with complement symmetry built in."""
+    if isinstance(torus_or_dims, HyperXFabric):
+        return float(
+            hamming.hamming_subset_bound(
+                torus_or_dims.dims, t, torus_or_dims.link_multiplicity
+            )
+        )
+    return _subset_bound(_dims_of(torus_or_dims), n, t)
+
+
 def optimal_cuboid(torus_or_dims, t: int) -> Optional[CuboidOptimum]:
     """Exact minimum-cut cuboid of size t inside the torus (Lemma 3.3 optimum).
 
@@ -289,19 +337,24 @@ def optimal_cuboid(torus_or_dims, t: int) -> Optional[CuboidOptimum]:
     ``ValueError`` for t outside (0, n].  Ties break toward the
     lexicographically-smallest canonical geometry.
 
+    On a :class:`~repro.network.fabric.HyperXFabric` the certificate is
+    the Lindsey/edge-identity bound of :mod:`repro.network.hamming`
+    (exact under uniform link multiplicity, so ``tight`` still certifies
+    against *all* subsets, not just boxes):
+
     >>> opt = optimal_cuboid((4, 4, 2), 8)
     >>> opt.geometry, opt.cut, opt.tight
     ((2, 2, 2), 16, True)
     """
-    a = _dims_of(torus_or_dims)
-    n = volume(a)
+    a = torus_or_dims if isinstance(torus_or_dims, HyperXFabric) else _dims_of(torus_or_dims)
+    n = volume(a.dims if isinstance(a, HyperXFabric) else a)
     if t <= 0 or t > n:
         raise ValueError(f"t must be in (0, {n}], got {t}")
     tbl = cut_table(a, t)
     if len(tbl) == 0:
         return None
     geom, cut = tbl.min_cut_geometry()
-    return CuboidOptimum(geom, cut, _subset_bound(a, n, t))
+    return CuboidOptimum(geom, cut, _any_subset_bound(a, n, t))
 
 
 def worst_cuboid(torus_or_dims, t: int) -> Optional[CuboidOptimum]:
@@ -312,15 +365,15 @@ def worst_cuboid(torus_or_dims, t: int) -> Optional[CuboidOptimum]:
     bound uses complement symmetry for t > n/2, so ``tight`` is a real
     certificate instead of being vacuously True there.
     """
-    a = _dims_of(torus_or_dims)
-    n = volume(a)
+    a = torus_or_dims if isinstance(torus_or_dims, HyperXFabric) else _dims_of(torus_or_dims)
+    n = volume(a.dims if isinstance(a, HyperXFabric) else a)
     if t <= 0 or t > n:
         raise ValueError(f"t must be in (0, {n}], got {t}")
     tbl = cut_table(a, t)
     if len(tbl) == 0:
         return None
     geom, cut = tbl.max_cut_geometry()
-    return CuboidOptimum(geom, cut, _subset_bound(a, n, t))
+    return CuboidOptimum(geom, cut, _any_subset_bound(a, n, t))
 
 
 def small_set_expansion(torus_or_dims, t: int) -> float:
@@ -467,7 +520,35 @@ def bisection_table(
     Gene/Q partition) are closed-form ``2N/L`` in one vectorized pass; odd
     longest dimensions fall back to the engine's exact cuboid search per
     geometry.  Raises ``ValueError`` when no cuboid of that size fits.
+
+    On a :class:`~repro.network.fabric.HyperXFabric` each box is its own
+    Hamming graph (:meth:`HyperXFabric.sub_fabric` — multiplicities
+    inherited tightest-fit), so its internal bisection comes from the
+    exact Lindsey half-set cut; ``unit_node_dims`` node scaling is the
+    BG/Q torus convention and is rejected there.
+
+    >>> from .fabric import HyperXFabric
+    >>> bisection_table(HyperXFabric((16, 4)), 16).ranked()
+    [((16, 1), 64), ((4, 4), 16), ((8, 2), 8)]
     """
+    if isinstance(torus_or_dims, HyperXFabric):
+        if unit_node_dims is not None:
+            raise ValueError(
+                "unit_node_dims is the BG/Q torus node-scaling convention; "
+                "HyperX fabrics rank allocation-unit boxes directly"
+            )
+        fab = torus_or_dims
+        geoms = cut_table(fab, units).geometries
+        if geoms.shape[0] == 0:
+            raise ValueError(f"no box of {units} units fits in H{fab.dims}")
+        bis = np.array(
+            [
+                fab.sub_fabric(tuple(int(x) for x in g)).bisection_links()
+                for g in geoms
+            ],
+            dtype=np.int64,
+        )
+        return BisectionTable(fab.dims, units, geoms, bis, None)
     a = _dims_of(torus_or_dims)
     geoms = fitting_geometries(a, units)
     if geoms.shape[0] == 0:
@@ -605,6 +686,20 @@ def advise_partition(
     agree exactly (the §7 validation property), so a divergence flags a
     modeling bug rather than a worse prediction.
 
+    On a :class:`~repro.network.fabric.HyperXFabric` the contention
+    benchmark is all-to-all inside the box rather than bisection pairing
+    — HyperX dimensions have diameter 1, so pairing never contends and
+    cannot separate geometries; all-to-all stresses the internal
+    bisection exactly as the paper's benchmark does on a torus.  The
+    certificate is the Lindsey bound on the optimum's half-set cut.
+
+    >>> from .fabric import HyperXFabric
+    >>> adv = advise_partition(HyperXFabric((16, 4)), 16, (4, 4))
+    >>> adv.optimal_geometry, adv.current_bisection, adv.optimal_bisection
+    ((16, 1), 16, 64)
+    >>> adv.predicted_speedup, adv.is_current_optimal, adv.certified
+    (4.0, False, True)
+
     >>> adv = advise_partition((4, 4, 3, 2), 4, (4, 1, 1, 1),
     ...                        unit_node_dims=(4, 4, 4, 4, 2))
     >>> adv.optimal_geometry, adv.current_bisection, adv.optimal_bisection
@@ -612,6 +707,15 @@ def advise_partition(
     >>> round(adv.predicted_speedup, 2), adv.is_current_optimal, adv.certified
     (2.0, False, True)
     """
+    if isinstance(torus_or_dims, HyperXFabric):
+        return _advise_hyperx(
+            torus_or_dims,
+            units,
+            current_geometry,
+            unit_node_dims=unit_node_dims,
+            simulate=simulate,
+            backend=backend,
+        )
     from .routing import pairing_speedup  # lazy: keeps this module geometry-only
 
     a = _dims_of(torus_or_dims)
@@ -652,6 +756,67 @@ def advise_partition(
         optimal_geometry=opt_geom,
         optimal_bisection=opt_bis,
         bound=theorem31_bound(nd_opt, n_nodes // 2),
+        predicted_speedup=predicted,
+        simulated_speedup=simulated,
+    )
+
+
+def _advise_hyperx(
+    fab: HyperXFabric,
+    units: int,
+    current_geometry: Optional[Sequence[int]],
+    *,
+    unit_node_dims: Optional[Sequence[int]],
+    simulate: bool,
+    backend: Optional[str],
+) -> PartitionAdvice:
+    """HyperX body of :func:`advise_partition`: rank boxes by internal
+    Hamming bisection, predict the all-to-all contention ratio with the
+    closed form, certify with the Lindsey half-set bound."""
+    from .routing import hyperx_all_to_all_max_load
+
+    tbl = bisection_table(fab, units, unit_node_dims)  # rejects node scaling
+    opt_geom, opt_bis = tbl.best()
+    if current_geometry is None:
+        cur_geom, cur_bis = tbl.worst()
+    else:
+        cur_geom = canonical(
+            tuple(current_geometry) + (1,) * (len(fab.dims) - len(tuple(current_geometry)))
+        )
+        if volume(cur_geom) != units:
+            raise ValueError(
+                f"current geometry {cur_geom} has volume {volume(cur_geom)}, "
+                f"expected {units}"
+            )
+        cur_bis = tbl.bisection_of(cur_geom)
+    sub_cur = fab.sub_fabric(cur_geom)
+    sub_opt = fab.sub_fabric(opt_geom)
+    load_cur = hyperx_all_to_all_max_load(sub_cur)
+    load_opt = hyperx_all_to_all_max_load(sub_opt)
+    predicted = load_cur / load_opt if load_opt > 0.0 else 1.0
+    simulated: Optional[float] = None
+    if simulate:
+        from .netsim import simulate_fabric_traffic
+        from .patterns import all_to_all
+
+        t_cur = simulate_fabric_traffic(
+            sub_cur, all_to_all(sub_cur.dims), backend=backend
+        ).makespan
+        t_opt = simulate_fabric_traffic(
+            sub_opt, all_to_all(sub_opt.dims), backend=backend
+        ).makespan
+        simulated = t_cur / t_opt if t_opt > 0.0 else 1.0
+    return PartitionAdvice(
+        units=units,
+        current_geometry=cur_geom,
+        current_bisection=cur_bis,
+        optimal_geometry=opt_geom,
+        optimal_bisection=opt_bis,
+        bound=float(
+            hamming.hamming_subset_bound(
+                sub_opt.dims, units // 2, sub_opt.link_multiplicity
+            )
+        ),
         predicted_speedup=predicted,
         simulated_speedup=simulated,
     )

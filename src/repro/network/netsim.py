@@ -69,8 +69,9 @@ import numpy as np
 
 from ..obs.trace import TRACER as _TRACER
 from .backend import resolve_backend
+from .fabric import HyperXFabric, Torus, TorusFabric
 from .geometry import volume
-from .routing import max_link_load
+from .routing import _hyperx_blocks, _hyperx_flows, max_link_load
 
 Coord = Tuple[int, ...]
 Traffic = Tuple[np.ndarray, np.ndarray, np.ndarray]
@@ -179,6 +180,10 @@ class FlowPaths:
     link_ids: np.ndarray  # (P,) flat directed-link ids
     flow_ids: np.ndarray  # (P,) owning subflow per entry
     mode: str = "dor"
+    # Non-torus fabrics carry their own dense per-slot capacities (in units
+    # of link_bw — parallel trunked links fold in); None keeps the historical
+    # torus layout, whose capacities come from ``link_capacities`` instead.
+    capacities: Optional[np.ndarray] = None
 
     @property
     def n_flows(self) -> int:
@@ -186,8 +191,16 @@ class FlowPaths:
         return int(self.vol.shape[0])
 
     def link_loads(self) -> np.ndarray:
-        """Total routed volume per directed link, shaped ``(D, 2, *dims)``
-        — for ``mode="dor"`` this is exactly ``route_dor``'s tensor."""
+        """Total routed volume per directed link — shaped ``(D, 2, *dims)``
+        for torus paths (for ``mode="dor"`` this is exactly
+        ``route_dor``'s tensor), or flat ``(L,)`` in the fabric's own link
+        layout when the paths carry explicit ``capacities``."""
+        if self.capacities is not None:
+            return np.bincount(
+                self.link_ids,
+                weights=self.vol[self.flow_ids],
+                minlength=self.capacities.shape[0],
+            )
         n = volume(self.dims)
         flat = np.bincount(
             self.link_ids,
@@ -197,7 +210,15 @@ class FlowPaths:
         return flat.reshape((len(self.dims), 2) + self.dims)
 
     def max_link_load(self, double_link_on_2: bool = True) -> float:
-        """Max per-physical-link routed volume (double links halve)."""
+        """Max per-physical-link routed volume (double links halve; on
+        explicit-capacity fabrics each slot's load is normalized by its
+        relative capacity instead)."""
+        if self.capacities is not None:
+            loads = self.link_loads()
+            pos = self.capacities > 0.0
+            if not pos.any():
+                return 0.0
+            return float((loads[pos] / self.capacities[pos]).max())
         return max_link_load(self.dims, self.link_loads(), double_link_on_2)
 
 
@@ -629,7 +650,10 @@ def _simulate_flows_impl(
     dims = paths.dims
     F = paths.n_flows
     vol = paths.vol
-    cap = link_capacities(dims, link_bw, double_link_on_2).ravel()
+    if paths.capacities is not None:
+        cap = paths.capacities * link_bw
+    else:
+        cap = link_capacities(dims, link_bw, double_link_on_2).ravel()
     n_links = cap.shape[0]  # flat ids are already compact: 2 * D * N
     link_of_entry = paths.link_ids
     flow_of_entry = paths.flow_ids
@@ -661,7 +685,7 @@ def _simulate_flows_impl(
             used = np.bincount(
                 link_of_entry, weights=rates[flow_of_entry], minlength=n_links
             )
-            util = used / cap
+            util = np.divide(used, cap, out=np.zeros_like(used), where=cap > 0.0)
             busy = util[used > 0.0]
             timeline.append(
                 UtilizationSample(
@@ -670,7 +694,11 @@ def _simulate_flows_impl(
                     max_utilization=float(busy.max()) if busy.shape[0] else 0.0,
                     mean_utilization=float(busy.mean()) if busy.shape[0] else 0.0,
                     active_flows=int(act_idx.shape[0]),
-                    utilization=util.reshape((len(dims), 2) + dims),
+                    utilization=(
+                        util
+                        if paths.capacities is not None
+                        else util.reshape((len(dims), 2) + dims)
+                    ),
                 )
             )
 
@@ -873,6 +901,107 @@ def compare_routing(
     return RoutingComparison(dims=dims, dor_makespan=t_dor, adaptive_makespan=t_adp)
 
 
+# ---------------------------------------------------------------------------
+# Fabric-dispatching entry points (torus or HyperX through one API).
+# ---------------------------------------------------------------------------
+def _fabric_dims(fabric) -> Tuple[int, ...]:
+    if isinstance(fabric, (TorusFabric, Torus, HyperXFabric)):
+        return fabric.dims
+    return tuple(int(a) for a in fabric)
+
+
+def fabric_paths(
+    fabric,
+    traffic: Traffic,
+    mode: Optional[str] = None,
+    split_ties: bool = True,
+) -> FlowPaths:
+    """Route a ``(src, dst, vol)`` pattern on any fabric.
+
+    Torus fabrics (or plain dims) dispatch to :func:`build_paths` with the
+    torus routers (``mode`` ``"dor"``/``"adaptive"``, default ``"dor"``) —
+    the returned paths are identical to the historical API.  HyperX
+    fabrics route with :func:`repro.network.routing.route_hyperx`'s flow
+    expansion (``mode`` ``"minimal"``/``"dal"``, default ``"minimal"``)
+    and carry the fabric's dense per-slot capacities so the same
+    max-min-fair drain prices trunked clique links correctly.
+    """
+    if isinstance(fabric, HyperXFabric):
+        src, dst, vol = traffic
+        M = np.atleast_2d(np.asarray(src)).shape[0]
+        volb = np.broadcast_to(np.asarray(vol, dtype=np.float64), (M,))
+        msg, fvol, link_ids, flow_ids = _hyperx_flows(
+            fabric, src, dst, volb, mode or "minimal"
+        )
+        _, n_slots = _hyperx_blocks(fabric.dims)
+        return FlowPaths(
+            dims=fabric.dims,
+            n_messages=M,
+            msg=msg,
+            vol=fvol,
+            link_ids=link_ids,
+            flow_ids=flow_ids,
+            mode=mode or "minimal",
+            capacities=fabric.links().dense_capacities() / fabric.link_bw,
+        )
+    return build_paths(_fabric_dims(fabric), traffic, mode=mode or "dor", split_ties=split_ties)
+
+
+def simulate_fabric_traffic(
+    fabric,
+    traffic: Traffic,
+    mode: Optional[str] = None,
+    split_ties: bool = True,
+    link_bw: float = 1.0,
+    double_link_on_2: bool = True,
+    record_utilization: bool = False,
+    backend: Optional[str] = None,
+) -> FlowSimResult:
+    """Route and drain a pattern on any fabric in one call — the
+    fabric-generic form of :func:`simulate_traffic` (to which it is
+    bit-identical on a torus)."""
+    paths = fabric_paths(fabric, traffic, mode=mode, split_ties=split_ties)
+    return simulate_flows(
+        paths,
+        link_bw=link_bw,
+        double_link_on_2=double_link_on_2,
+        record_utilization=record_utilization,
+        backend=backend,
+    )
+
+
+def compare_fabric_routing(
+    fabric,
+    traffic: Traffic,
+    split_ties: bool = True,
+    link_bw: float = 1.0,
+    double_link_on_2: bool = True,
+    backend: Optional[str] = None,
+) -> RoutingComparison:
+    """Baseline vs adaptive routing on any fabric.
+
+    Torus: DOR vs minimal-adaptive (== :func:`compare_routing`).  HyperX:
+    minimal dimension-ordered vs DAL.  Either way ``recovered_fraction``
+    answers the paper's question — how much of the pattern's contention
+    can routing alone remove?  ~0 for steady translation-invariant
+    patterns on both topologies; positive only for skewed fields.
+    """
+    base_mode, adp_mode = (
+        ("minimal", "dal") if isinstance(fabric, HyperXFabric) else ("dor", "adaptive")
+    )
+    t_base = simulate_fabric_traffic(
+        fabric, traffic, mode=base_mode, split_ties=split_ties,
+        link_bw=link_bw, double_link_on_2=double_link_on_2, backend=backend,
+    ).makespan
+    t_adp = simulate_fabric_traffic(
+        fabric, traffic, mode=adp_mode, split_ties=split_ties,
+        link_bw=link_bw, double_link_on_2=double_link_on_2, backend=backend,
+    ).makespan
+    return RoutingComparison(
+        dims=_fabric_dims(fabric), dor_makespan=t_base, adaptive_makespan=t_adp
+    )
+
+
 __all__ = [
     "FlowPaths",
     "FlowSimResult",
@@ -882,9 +1011,12 @@ __all__ = [
     "UtilizationSample",
     "adaptive_paths",
     "build_paths",
+    "compare_fabric_routing",
     "compare_routing",
     "dor_paths",
+    "fabric_paths",
     "link_capacities",
+    "simulate_fabric_traffic",
     "simulate_flows",
     "simulate_phases",
     "simulate_traffic",

@@ -45,7 +45,7 @@ import numpy as np
 
 from .backend import resolve_backend
 from .geometry import canonical, volume
-from .fabric import Torus
+from .fabric import HyperXFabric, Torus, TorusFabric
 
 Coord = Tuple[int, ...]
 
@@ -54,10 +54,14 @@ __all__ = [
     "LinkLoads",
     "PairingPrediction",
     "all_to_all_max_load",
+    "hyperx_all_to_all_max_load",
+    "hyperx_max_link_load",
     "max_link_load",
     "pairing_speedup",
     "predict_pairing_time",
     "route_dor",
+    "route_hyperx",
+    "route_pattern",
     "simulate_pattern",
     "uniform_offset_max_load",
 ]
@@ -435,3 +439,283 @@ def pairing_speedup(
     a = predict_pairing_time(dims_a, 1.0, 1.0, split_ties)
     b = predict_pairing_time(dims_b, 1.0, 1.0, split_ties)
     return a.max_link_load / b.max_link_load
+
+
+# ---------------------------------------------------------------------------
+# HyperX routing: minimal (dimension-ordered direct hops) and DAL.
+# ---------------------------------------------------------------------------
+def _hyperx_blocks(dims: Tuple[int, ...]) -> Tuple[List[int], int]:
+    """Per-dimension slot-block starts of the HyperX link-id layout
+    (matching :meth:`repro.network.fabric.HyperXFabric.links`) and the
+    total dense slot count ``N * sum(S_k)``."""
+    n = volume(dims)
+    bases: List[int] = []
+    b = 0
+    for a in dims:
+        bases.append(b)
+        b += n * a
+    return bases, b
+
+
+def _hyperx_order_links(
+    dims: Tuple[int, ...],
+    src: np.ndarray,
+    dst: np.ndarray,
+    order: Sequence[int],
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-hop link incidence of every message under one dimension order.
+
+    In HyperX each dimension correction is a single direct hop within the
+    current cell's dim-k clique, so a message's path visits one link per
+    differing coordinate.  Returns ``(link_ids, message_idx)`` pairs, one
+    per dimension that any message hops in.
+    """
+    bases, _ = _hyperx_blocks(dims)
+    cur = src.copy()
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for k in order:
+        a = dims[k]
+        if a > 1:
+            idx = np.flatnonzero(cur[:, k] != dst[:, k])
+            if idx.shape[0]:
+                flat = np.ravel_multi_index(tuple(cur[idx].T), dims)
+                out.append((bases[k] + flat * a + dst[idx, k], idx))
+        cur[:, k] = dst[:, k]
+    return out
+
+
+def _hyperx_candidate_orders(D: int) -> List[Tuple[int, ...]]:
+    """DAL's candidate dimension orders: the D cyclic rotations of the
+    canonical order (rotation 0 *is* minimal routing).  Rotations reach
+    every dimension as the first correction while keeping the candidate
+    count linear in D."""
+    base = tuple(range(D))
+    return [base[r:] + base[:r] for r in range(max(D, 1))]
+
+
+def _hyperx_flows(
+    fabric: HyperXFabric,
+    src: np.ndarray,
+    dst: np.ndarray,
+    vol: np.ndarray,
+    mode: str = "minimal",
+    rounds: int = 2,
+    balance_rtol: float = 1e-9,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Expand messages into routed subflows on a HyperX fabric.
+
+    Returns ``(msg, fvol, link_ids, flow_ids)`` in the shape
+    :class:`repro.network.netsim.FlowPaths` consumes.  ``mode="minimal"``
+    routes canonical dimension order (one subflow per message).
+    ``mode="dal"`` is dimensionally-adaptive load-balanced routing:
+    every message may *split* its volume across the candidate dimension
+    orders, weighted by the inverse of each order's bottleneck link load
+    under the current field, iterated ``rounds`` times from the minimal
+    field.  Messages whose candidate bottlenecks are balanced (within
+    ``balance_rtol``) keep the canonical minimal order exactly — so on a
+    steady translation-invariant pattern (uniform field) DAL *is*
+    minimal routing, bit for bit, mirroring the torus
+    ``compare_routing`` finding; only genuinely skewed fields trigger
+    splitting.  Fractional splitting (rather than 0/1 re-ordering) makes
+    the iteration stable — simultaneous all-or-nothing switches
+    oscillate on hotspots.
+    """
+    dims = fabric.dims
+    D = len(dims)
+    src = np.atleast_2d(np.asarray(src, dtype=np.int64))
+    dst = np.atleast_2d(np.asarray(dst, dtype=np.int64))
+    if src.shape != dst.shape or src.shape[1] != D:
+        raise ValueError(f"src/dst must have shape (M, {D}); got {src.shape}/{dst.shape}")
+    M = src.shape[0]
+    vol = np.array(np.broadcast_to(np.asarray(vol, dtype=np.float64), (M,)))
+    _, n_slots = _hyperx_blocks(dims)
+    empty = np.zeros(0, dtype=np.int64)
+    if M == 0:
+        return empty, np.zeros(0), empty.copy(), empty.copy()
+
+    orders = _hyperx_candidate_orders(D)
+    per_order = [_hyperx_order_links(dims, src, dst, o) for o in orders]
+
+    if mode == "minimal":
+        weights = np.zeros((M, len(orders)))
+        weights[:, 0] = 1.0
+    elif mode == "dal":
+        weights = np.zeros((M, len(orders)))
+        weights[:, 0] = 1.0
+        tiny = 1e-300
+        for _ in range(max(rounds, 1)):
+            loads = np.zeros(n_slots)
+            for r, hops in enumerate(per_order):
+                w = weights[:, r] * vol
+                for ids, idx in hops:
+                    np.add.at(loads, ids, w[idx])
+            cost = np.zeros((M, len(orders)))
+            for r, hops in enumerate(per_order):
+                for ids, idx in hops:
+                    np.maximum.at(cost[:, r], idx, loads[ids])
+            cmax = cost.max(axis=1)
+            cmin = cost.min(axis=1)
+            skewed = cmax - cmin > balance_rtol * np.maximum(cmax, tiny)
+            inv = 1.0 / np.maximum(cost, tiny)
+            frac = inv / inv.sum(axis=1, keepdims=True)
+            weights[skewed] = frac[skewed]
+            keep = ~skewed
+            weights[keep] = 0.0
+            weights[keep, 0] = 1.0
+    else:
+        raise ValueError(f"unknown HyperX routing mode {mode!r}; expected 'minimal' or 'dal'")
+
+    msg_l: List[np.ndarray] = []
+    fvol_l: List[np.ndarray] = []
+    link_l: List[np.ndarray] = []
+    flow_l: List[np.ndarray] = []
+    f_base = 0
+    for r, hops in enumerate(per_order):
+        live = np.flatnonzero(weights[:, r] > 0.0)
+        if not live.shape[0]:
+            continue
+        pos = np.full(M, -1, dtype=np.int64)
+        pos[live] = f_base + np.arange(live.shape[0])
+        msg_l.append(live)
+        fvol_l.append(weights[live, r] * vol[live])
+        for ids, idx in hops:
+            sel = pos[idx] >= 0
+            link_l.append(ids[sel])
+            flow_l.append(pos[idx][sel])
+        f_base += live.shape[0]
+    return (
+        np.concatenate(msg_l) if msg_l else empty,
+        np.concatenate(fvol_l) if fvol_l else np.zeros(0),
+        np.concatenate(link_l) if link_l else empty.copy(),
+        np.concatenate(flow_l) if flow_l else empty.copy(),
+    )
+
+
+def route_hyperx(
+    fabric: HyperXFabric,
+    src: np.ndarray,
+    dst: np.ndarray,
+    vol,
+    mode: str = "minimal",
+    rounds: int = 2,
+) -> np.ndarray:
+    """Per-directed-link loads of a message batch on a HyperX fabric.
+
+    Returns a flat ``(N * sum(S_k),)`` load vector in the dense link-id
+    layout of :meth:`repro.network.fabric.HyperXFabric.links` (unused
+    self-slots stay zero).  ``mode="minimal"`` corrects coordinates in
+    canonical dimension order — every hop is direct, path length equals
+    Hamming distance; ``mode="dal"`` additionally load-balances across
+    dimension orders (see :func:`_hyperx_flows`).  The per-hop reference
+    oracle lives in ``tests``/``benchmarks/bench_hyperx.py``; loads are
+    exact sums, so engine and oracle agree bit-for-bit.
+
+    >>> import numpy as np
+    >>> hx = HyperXFabric((4, 4))
+    >>> loads = route_hyperx(hx, np.array([[0, 0]]), np.array([[2, 3]]), 1.0)
+    >>> float(loads.sum())   # two direct hops: dim 0 then dim 1
+    2.0
+    """
+    M = np.atleast_2d(np.asarray(src)).shape[0]
+    vol = np.broadcast_to(np.asarray(vol, dtype=np.float64), (M,))
+    msg, fvol, link_ids, flow_ids = _hyperx_flows(fabric, src, dst, vol, mode, rounds)
+    _, n_slots = _hyperx_blocks(fabric.dims)
+    if not link_ids.shape[0]:
+        return np.zeros(n_slots)
+    return np.bincount(link_ids, weights=fvol[flow_ids], minlength=n_slots)
+
+
+def hyperx_max_link_load(fabric: HyperXFabric, loads: np.ndarray) -> float:
+    """Max per-physical-link load of a :func:`route_hyperx` vector —
+    dimension k's trunked ``K_k`` parallel links share their dim's
+    traffic, dividing the effective load (the HyperX analogue of the
+    torus double-link halving)."""
+    dims = fabric.dims
+    n = volume(dims)
+    m = 0.0
+    base = 0
+    for k, a in enumerate(dims):
+        block = loads[base: base + n * a]
+        if block.shape[0]:
+            m = max(m, float(block.max()) / fabric.link_multiplicity[k])
+        base += n * a
+    return m
+
+
+def hyperx_all_to_all_max_load(fabric: HyperXFabric, vol_per_pair: float = 1.0) -> float:
+    """Exact max effective link load of all-to-all on a HyperX fabric.
+
+    Under minimal dimension-ordered routing the load field of all-to-all
+    is uniform within each dimension: the dim-k link out of any cell is
+    shared by exactly ``N / S_k`` ordered pairs (the pairs whose
+    intermediate cell sits there), each contributing ``vol_per_pair``, so
+
+        max load = vol_per_pair * N / min_k (S_k * K_k).
+
+    This is the HyperX analogue of :func:`all_to_all_max_load` and the
+    closed form behind the allocation study's geometry ranking: covering
+    a dimension fully (``c_k == S_k`` — impossible to beat) maximises
+    ``min_k c_k``'s denominator, so *elongated* boxes minimise all-to-all
+    contention on HyperX, the exact opposite of the torus preference.
+    Cross-checked against :func:`route_hyperx` in the test suite.
+
+    >>> hyperx_all_to_all_max_load(HyperXFabric((4, 4)))
+    4.0
+    >>> hyperx_all_to_all_max_load(HyperXFabric((16, 1)))
+    1.0
+    """
+    n = volume(fabric.dims)
+    denom = min(
+        a * k for a, k in zip(fabric.dims, fabric.link_multiplicity) if a > 1
+    ) if any(a > 1 for a in fabric.dims) else None
+    if denom is None:
+        return 0.0
+    return vol_per_pair * n / denom
+
+
+# ---------------------------------------------------------------------------
+# The single fabric-dispatch entry point.
+# ---------------------------------------------------------------------------
+def route_pattern(
+    fabric,
+    src: np.ndarray,
+    dst: np.ndarray,
+    vol,
+    *,
+    mode: Optional[str] = None,
+    split_ties: bool = True,
+    backend: Optional[str] = None,
+) -> np.ndarray:
+    """Route a message batch on any fabric — one dispatch for the stack.
+
+    * :class:`~repro.network.fabric.TorusFabric` / :class:`Torus` / plain
+      dims: dimension-ordered torus routing, returning :func:`route_dor`'s
+      ``(D, 2, *dims)`` tensor **bit-for-bit** (``mode`` must be ``"dor"``
+      or ``None``; the adaptive torus router lives in
+      :mod:`repro.network.netsim`, where path state exists).
+    * :class:`~repro.network.fabric.HyperXFabric`: the flat HyperX load
+      vector of :func:`route_hyperx` (``mode`` ``"minimal"`` (default) or
+      ``"dal"``; ``split_ties``/``backend`` do not apply — clique hops
+      have no antipodal ties).
+
+    >>> import numpy as np
+    >>> from .fabric import TorusFabric
+    >>> t = route_pattern(TorusFabric.bgq((4, 4)), np.array([[0, 0]]),
+    ...                   np.array([[2, 0]]), 1.0)
+    >>> t.shape
+    (2, 2, 4, 4)
+    """
+    if isinstance(fabric, HyperXFabric):
+        if backend not in (None, "numpy"):
+            raise ValueError("HyperX routing is numpy-only; backend must be None/'numpy'")
+        return route_hyperx(fabric, src, dst, vol, mode=mode or "minimal")
+    if isinstance(fabric, (TorusFabric, Torus)):
+        dims = fabric.dims
+    else:
+        dims = tuple(int(a) for a in fabric)
+    if mode not in (None, "dor"):
+        raise ValueError(
+            f"torus route_pattern supports mode='dor' only (got {mode!r}); "
+            f"adaptive torus routing lives in repro.network.netsim"
+        )
+    return route_dor(dims, src, dst, vol, split_ties=split_ties, backend=backend)

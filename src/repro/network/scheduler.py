@@ -79,10 +79,11 @@ from .allocation import (
     ScheduledJob,
     SimulationResult,
 )
+from .fabric import HyperXFabric
 from .geometry import Geometry
 from .isoperimetry import best_bisection_geometry, scaled_node_dims
 from .placement import first_fit, placement_cells
-from .routing import predict_pairing_time
+from .routing import hyperx_all_to_all_max_load, predict_pairing_time
 
 Coord = Tuple[int, ...]
 
@@ -223,6 +224,11 @@ class SchedulerService:
     ):
         self.machine = MachineState(machine_dims, backend=backend)
         self.policy = policy
+        if unit_node_dims is not None and isinstance(self.machine.fabric, HyperXFabric):
+            raise ValueError(
+                "unit_node_dims is the BG/Q torus node-scaling convention; "
+                "HyperX machines schedule allocation-unit boxes directly"
+            )
         self.unit_node_dims = unit_node_dims
         self.link_bw = float(link_bw)
         self.backfill = bool(backfill)
@@ -528,15 +534,28 @@ class SchedulerService:
             placed = self.policy.allocate(self.machine, request)
         if placed is None:
             return False
-        node_dims = scaled_node_dims(placed.geometry, self.unit_node_dims)
-        pred = predict_pairing_time(node_dims, 1.0, self.link_bw)
+        if isinstance(self.machine.fabric, HyperXFabric):
+            # HyperX dimensions have diameter 1, so bisection pairing never
+            # contends; the geometry-sensitive benchmark is the box's
+            # internal all-to-all (closed form, exact).
+            pred_time = (
+                hyperx_all_to_all_max_load(
+                    self.machine.fabric.sub_fabric(placed.geometry)
+                )
+                / self.link_bw
+            )
+        else:
+            node_dims = scaled_node_dims(placed.geometry, self.unit_node_dims)
+            pred_time = predict_pairing_time(
+                node_dims, 1.0, self.link_bw
+            ).time_per_volume
         opt_bis = self._optimal_bisection(request.units)
         job = ScheduledJob(
             request=request,
             placement=placed,
             start=self.now,
             end=self.now + request.duration,
-            predicted_comm_time=pred.time_per_volume,
+            predicted_comm_time=pred_time,
             bisection_efficiency=(
                 placed.bisection_links / opt_bis if opt_bis else 1.0
             ),
@@ -614,7 +633,7 @@ class SchedulerService:
         if units not in self._opt_bisection:
             try:
                 self._opt_bisection[units] = best_bisection_geometry(
-                    self.machine.dims, units
+                    self.machine.fabric_or_dims, units
                 )[1]
             except ValueError:
                 self._opt_bisection[units] = 0

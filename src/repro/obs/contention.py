@@ -171,26 +171,39 @@ def _own_link_mask(
 
 
 def _advise(
-    dims: Tuple[int, ...],
+    dims_or_fabric,
     units: int,
     geometry: Tuple[int, ...],
     unit_node_dims: Optional[Sequence[int]],
 ) -> Tuple[Optional[Tuple[int, ...]], float, float, float, float, bool]:
     """(optimal_geometry, pairing_load, optimal_load, bound, ratio,
-    certified) for one partition, via the isoperimetry advisor."""
+    certified) for one partition, via the isoperimetry advisor.  Accepts
+    torus dims or a :class:`~repro.network.fabric.HyperXFabric`, whose
+    contention benchmark is the box-internal all-to-all (pairing never
+    contends across diameter-1 dimensions)."""
+    from repro.network.fabric import HyperXFabric
     from repro.network.isoperimetry import advise_partition, scaled_node_dims
-    from repro.network.routing import predict_pairing_time
+    from repro.network.routing import (
+        hyperx_all_to_all_max_load,
+        predict_pairing_time,
+    )
 
     try:
         advice = advise_partition(
-            dims, units, geometry, unit_node_dims=unit_node_dims
+            dims_or_fabric, units, geometry, unit_node_dims=unit_node_dims
         )
     except ValueError:
         return None, 0.0, 0.0, 0.0, 1.0, False
-    cur_nodes = scaled_node_dims(geometry, unit_node_dims)
-    opt_nodes = scaled_node_dims(advice.optimal_geometry, unit_node_dims)
-    cur_load = predict_pairing_time(cur_nodes, 1.0, 1.0).max_link_load
-    opt_load = predict_pairing_time(opt_nodes, 1.0, 1.0).max_link_load
+    if isinstance(dims_or_fabric, HyperXFabric):
+        cur_load = hyperx_all_to_all_max_load(dims_or_fabric.sub_fabric(geometry))
+        opt_load = hyperx_all_to_all_max_load(
+            dims_or_fabric.sub_fabric(advice.optimal_geometry)
+        )
+    else:
+        cur_nodes = scaled_node_dims(geometry, unit_node_dims)
+        opt_nodes = scaled_node_dims(advice.optimal_geometry, unit_node_dims)
+        cur_load = predict_pairing_time(cur_nodes, 1.0, 1.0).max_link_load
+        opt_load = predict_pairing_time(opt_nodes, 1.0, 1.0).max_link_load
     return (
         tuple(advice.optimal_geometry),
         float(cur_load),
@@ -201,11 +214,127 @@ def _advise(
     )
 
 
+def _attribute_hyperx(
+    fabric,
+    loads_by_job: Dict[int, np.ndarray],
+    placements: Dict[int, Any],
+    *,
+    top_hotspots: int = 5,
+) -> ContentionReport:
+    """HyperX body of :func:`attribute_traffic`: flat per-slot load
+    vectors in the dense link layout of ``fabric.links()``.  The hotspot
+    records reuse :class:`HotspotLink` with HyperX semantics —
+    ``direction`` is the destination *coordinate* of the clique link, not
+    a torus +/- direction."""
+    from repro.network.placement import placement_cells
+
+    dims = fabric.dims
+    n = int(np.prod(dims))
+    table = fabric.links()
+    n_slots = table.n_slots
+    total = np.zeros(n_slots, dtype=np.float64)
+    jobs: List[JobContention] = []
+    cross_total = 0.0
+    for jid in sorted(loads_by_job):
+        loads = np.asarray(loads_by_job[jid], dtype=np.float64)
+        if loads.shape != (n_slots,):
+            raise ValueError(
+                f"job {jid} loads must have shape ({n_slots},) for H{dims}; "
+                f"got {loads.shape}"
+            )
+        total += loads
+        p = placements.get(jid)
+        if p is not None:
+            oriented = tuple(int(w) for w in p.oriented)
+            offset = tuple(int(o) for o in p.offset)
+            geometry = tuple(int(g) for g in p.geometry)
+            units = int(np.prod(oriented))
+            member = np.zeros(dims, dtype=bool)
+            member[placement_cells(dims, oriented, offset)] = True
+            member = member.ravel()
+            own = np.zeros(n_slots, dtype=bool)
+            both = member[table.src] & member[table.dst]
+            own[table.link[both]] = True
+            self_load = float(loads[own].sum())
+            cross_load = float(loads[~own].sum())
+            opt_geom, cur_load, opt_load, bound, ratio, certified = _advise(
+                fabric, units, geometry, None
+            )
+        else:
+            oriented = offset = geometry = ()
+            units = 0
+            self_load = float(loads.sum())
+            cross_load = 0.0
+            opt_geom, cur_load, opt_load, bound, ratio, certified = (
+                None, 0.0, 0.0, 0.0, 1.0, False,
+            )
+        cross_total += cross_load
+        jobs.append(
+            JobContention(
+                job_id=int(jid),
+                units=units,
+                geometry=geometry,
+                oriented=oriented,
+                offset=offset,
+                self_load=self_load,
+                cross_load=cross_load,
+                max_link_load=float(loads.max()) if loads.size else 0.0,
+                pairing_load=cur_load,
+                optimal_geometry=opt_geom,
+                optimal_max_load=opt_load,
+                bound=bound,
+                avoidable_ratio=ratio,
+                certified=certified,
+            )
+        )
+
+    bases: List[int] = []
+    b = 0
+    for a in dims:
+        bases.append(b)
+        b += n * a
+    hotspots: List[HotspotLink] = []
+    if total.size and top_hotspots > 0:
+        k = min(int(top_hotspots), int((total > 0.0).sum()))
+        if k > 0:
+            idx = np.argpartition(total, -k)[-k:]
+            idx = idx[np.argsort(-total[idx], kind="stable")]
+            for i in idx:
+                i = int(i)
+                kdim = max(d for d in range(len(dims)) if bases[d] <= i)
+                rel = i - bases[kdim]
+                cell = np.unravel_index(rel // dims[kdim], dims)
+                j = rel % dims[kdim]
+                shares = {}
+                for jid in sorted(loads_by_job):
+                    share = float(np.asarray(loads_by_job[jid])[i])
+                    if share > 0.0:
+                        shares[int(jid)] = share
+                hotspots.append(
+                    HotspotLink(
+                        dim=int(kdim),
+                        direction=int(j),  # destination coordinate (HyperX)
+                        cell=tuple(int(c) for c in cell),
+                        load=float(total[i]),
+                        shares=shares,
+                    )
+                )
+    return ContentionReport(
+        dims=dims,
+        jobs=tuple(jobs),
+        hotspots=tuple(hotspots),
+        total_load=float(total.sum()),
+        max_link_load=float(total.max()) if total.size else 0.0,
+        cross_load=cross_total,
+    )
+
+
 def attribute_traffic(
     dims: Sequence[int],
     loads_by_job: Dict[int, np.ndarray],
     placements: Optional[Dict[int, Any]] = None,
     *,
+    fabric=None,
     unit_node_dims: Optional[Sequence[int]] = None,
     top_hotspots: int = 5,
 ) -> ContentionReport:
@@ -217,7 +346,18 @@ def attribute_traffic(
     :class:`~repro.network.allocation.Placement` records; with them the
     self/cross split and the avoidable-contention gauge are computed,
     without them the report is attribution-only (geometry fields empty).
+
+    Passing a :class:`~repro.network.fabric.HyperXFabric` as ``fabric``
+    switches to flat per-slot load vectors in the fabric's dense link
+    layout (see :func:`_attribute_hyperx`); ``dims`` is then ignored in
+    favour of the fabric's own.
     """
+    from repro.network.fabric import HyperXFabric
+
+    if isinstance(fabric, HyperXFabric):
+        return _attribute_hyperx(
+            fabric, loads_by_job, placements or {}, top_hotspots=top_hotspots
+        )
     dims = tuple(int(a) for a in dims)
     D = len(dims)
     placements = placements or {}
@@ -318,10 +458,40 @@ def attribute_contention(
     (:func:`repro.network.placement.placement_loads` — the same tensor
     the scored policies stack into the background), so the per-job
     fields sum exactly to ``machine.traffic_loads()``.
+
+    A machine built over a :class:`~repro.network.fabric.HyperXFabric`
+    attributes each box's all-to-all under HyperX minimal routing
+    instead (:func:`repro.network.routing.route_hyperx`); its cross
+    traffic is structurally zero — minimal paths never leave the box —
+    so the report's gauge is purely the geometry-internal ratio.
     """
-    from repro.network.placement import placement_loads
+    from repro.network.fabric import HyperXFabric
+    from repro.network.placement import placement_cells, placement_loads
 
     dims = tuple(int(a) for a in machine.dims)
+    if isinstance(getattr(machine, "fabric", None), HyperXFabric):
+        from repro.network.routing import route_hyperx
+
+        fabric = machine.fabric
+        loads_by_job = {}
+        for jid, p in machine.placements.items():
+            member = np.zeros(dims, dtype=bool)
+            member[placement_cells(dims, p.oriented, p.offset)] = True
+            cells = np.stack(np.nonzero(member), axis=1)
+            t = cells.shape[0]
+            si = np.repeat(np.arange(t), t)
+            di = np.tile(np.arange(t), t)
+            keep = si != di
+            loads_by_job[jid] = route_hyperx(
+                fabric, cells[si[keep]], cells[di[keep]], 1.0
+            )
+        return attribute_traffic(
+            dims,
+            loads_by_job,
+            dict(machine.placements),
+            fabric=fabric,
+            top_hotspots=top_hotspots,
+        )
     loads_by_job = {
         jid: placement_loads(dims, p.oriented, p.offset)
         for jid, p in machine.placements.items()

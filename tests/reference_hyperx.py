@@ -1,0 +1,32 @@
+"""Per-hop Python reference for HyperX minimal routing.
+
+Walks each message coordinate by coordinate in canonical dimension order
+— the semantics ``repro.network.routing.route_hyperx(mode="minimal")``
+vectorizes — accumulating loads in the dense link-id layout of
+``HyperXFabric.links`` (slot ``base_k + flat(cell) * S_k + dst_coord``).
+Loads are exact sums, so engine and oracle agree bit for bit; the
+benchmark harness times the two against each other.
+"""
+
+import numpy as np
+
+from repro.network.geometry import volume
+
+
+def oracle_minimal_loads(fabric, src, dst, vol):
+    """Dense per-link loads of a message batch, one Python hop at a time."""
+    dims = fabric.dims
+    n = volume(dims)
+    bases, base = [], 0
+    for a in dims:
+        bases.append(base)
+        base += n * a
+    loads = np.zeros(base)
+    for s, d, v in zip(np.atleast_2d(src), np.atleast_2d(dst), np.atleast_1d(vol)):
+        cur = [int(x) for x in s]
+        for k in range(len(dims)):
+            if cur[k] != d[k]:
+                u = int(np.ravel_multi_index(tuple(cur), dims))
+                loads[bases[k] + u * dims[k] + int(d[k])] += v
+                cur[k] = int(d[k])
+    return loads

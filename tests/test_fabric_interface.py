@@ -1,0 +1,208 @@
+"""Conformance suite for the abstract Fabric interface.
+
+Every implementation (TorusFabric, HyperXFabric) must expose the same
+contract — an explicit ``links()`` incidence table the rest of the stack
+programs against — so the checks here run identically over both:
+
+    link-id hygiene        unique ids inside the dense slot space
+    links <-> neighbors    neighbors() derivable from the table, symmetric
+    capacity symmetry      src->dst trunk capacity == dst->src
+    netsim incidence       fabric_paths routes only over links() slots,
+                           with the table's own per-slot capacities
+    route_pattern          bit-for-bit route_dor on every torus spelling
+
+plus the regression for the slice planners' clear TypeError on non-ring
+fabrics (wrap semantics are meaningless on cliques).
+"""
+
+import numpy as np
+import pytest
+
+from repro.network import (
+    HyperXFabric,
+    Torus,
+    TorusFabric,
+    fabric_paths,
+    ranked_slice_geometries,
+    route_dor,
+    route_pattern,
+    simulate_fabric_traffic,
+    simulate_traffic,
+    slice_fabric,
+    worst_slice_geometry,
+)
+from repro.network.geometry import volume
+from repro.network.netsim import link_capacities
+
+FABRICS = [
+    pytest.param(TorusFabric.bgq((4, 4, 2)), id="torus-bgq-4x4x2"),
+    pytest.param(TorusFabric.tpu((4, 2), wrap=(True, False)), id="torus-tpu-4x2-chain"),
+    pytest.param(TorusFabric.tpu((8, 1)), id="torus-tpu-8x1"),
+    pytest.param(HyperXFabric((4, 4)), id="hyperx-4x4"),
+    pytest.param(HyperXFabric((6, 3, 2)), id="hyperx-6x3x2"),
+    pytest.param(HyperXFabric((4, 3), link_multiplicity=(2, 3)), id="hyperx-trunked"),
+    pytest.param(HyperXFabric((5, 1)), id="hyperx-5x1"),
+]
+
+
+def _random_traffic(fabric, rng, n_msgs=40):
+    """Random (src, dst, vol) coordinate traffic with no self-messages."""
+    dims = fabric.dims
+    n = volume(dims)
+    src = rng.integers(0, n, size=n_msgs)
+    dst = (src + rng.integers(1, n, size=n_msgs)) % n
+    vol = rng.uniform(0.5, 2.0, size=n_msgs)
+    to_coords = lambda flat: np.stack(np.unravel_index(flat, dims), axis=1)
+    return to_coords(src), to_coords(dst), vol
+
+
+# ---------------------------------------------------------------------------
+# The links() table itself.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fabric", FABRICS)
+def test_link_ids_unique_and_in_slot_space(fabric):
+    table = fabric.links()
+    assert len(np.unique(table.link)) == len(table)
+    if len(table):
+        assert table.link.min() >= 0
+        assert table.link.max() < table.n_slots
+    assert np.all(table.capacity > 0.0)
+    n = fabric.num_cells
+    assert np.all((table.src >= 0) & (table.src < n))
+    assert np.all((table.dst >= 0) & (table.dst < n))
+    assert np.all(table.src != table.dst)
+
+
+@pytest.mark.parametrize("fabric", FABRICS)
+def test_neighbors_match_table_and_are_symmetric(fabric):
+    table = fabric.links()
+    n = fabric.num_cells
+    adj = {c: set() for c in range(n)}
+    for s, d in zip(table.src, table.dst):
+        adj[int(s)].add(int(d))
+    for cell in range(n):
+        nbrs = fabric.neighbors(cell)
+        assert list(nbrs) == sorted(adj[cell])
+        assert np.all(nbrs != cell)
+        for other in nbrs:
+            assert cell in adj[int(other)]  # directed table covers both ways
+
+
+@pytest.mark.parametrize("fabric", FABRICS)
+def test_capacity_symmetric_per_cell_pair(fabric):
+    table = fabric.links()
+    cap = {}
+    for s, d, c in zip(table.src, table.dst, table.capacity):
+        cap[(int(s), int(d))] = cap.get((int(s), int(d)), 0.0) + float(c)
+    for (s, d), c in cap.items():
+        assert cap[(d, s)] == pytest.approx(c)
+
+
+@pytest.mark.parametrize("fabric", FABRICS)
+def test_dense_capacities_zero_only_on_unused_slots(fabric):
+    table = fabric.links()
+    dense = table.dense_capacities()
+    assert dense.shape == (table.n_slots,)
+    np.testing.assert_allclose(dense[table.link], table.capacity)
+    used = np.zeros(table.n_slots, dtype=bool)
+    used[table.link] = True
+    assert np.all(dense[~used] == 0.0)
+
+
+def test_torus_link_table_matches_netsim_capacities():
+    """The torus table folds BG/Q double links into capacity exactly as
+    netsim's ``link_capacities`` tensor does, slot for slot."""
+    for fab in (TorusFabric.bgq((4, 2, 2)), TorusFabric.tpu((4, 2))):
+        dense = fab.links().dense_capacities()
+        ref = link_capacities(
+            fab.dims, link_bw=fab.link_bw, double_link_on_2=fab.double_link_on_2
+        ).ravel()
+        np.testing.assert_allclose(dense, ref)
+
+
+def test_hyperx_degree_and_link_count():
+    fab = HyperXFabric((4, 3), link_multiplicity=(2, 3))
+    table = fab.links()
+    # One directed table row per (cell, same-dim peer); trunking folds
+    # into capacity, not row count.
+    assert len(table) == fab.num_cells * sum(a - 1 for a in fab.dims)
+    assert fab.degree == sum(k * (a - 1) for a, k in zip(fab.dims, fab.link_multiplicity))
+    nbrs = fab.neighbors(0)
+    assert len(nbrs) == sum(a - 1 for a in fab.dims)
+
+
+# ---------------------------------------------------------------------------
+# netsim builds its incidence from the same table.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fabric", FABRICS)
+def test_netsim_routes_only_over_fabric_links(fabric):
+    rng = np.random.default_rng(7)
+    src, dst, vol = _random_traffic(fabric, rng)
+    paths = fabric_paths(fabric, (src, dst, vol))
+    table = fabric.links()
+    assert np.all(np.isin(paths.link_ids, table.link))
+    if isinstance(fabric, HyperXFabric):
+        np.testing.assert_allclose(
+            paths.capacities, table.dense_capacities() / fabric.link_bw
+        )
+    else:
+        assert paths.capacities is None  # historical torus layout
+
+
+def test_fabric_sim_bit_identical_to_torus_sim():
+    fab = TorusFabric.bgq((4, 4))
+    rng = np.random.default_rng(11)
+    src, dst, vol = _random_traffic(fab, rng)
+    a = simulate_fabric_traffic(
+        fab, (src, dst, vol), link_bw=fab.link_bw, double_link_on_2=True
+    )
+    b = simulate_traffic(
+        fab.dims, (src, dst, vol), link_bw=fab.link_bw, double_link_on_2=True
+    )
+    assert a.makespan == b.makespan
+    assert a.slowdown == b.slowdown
+    np.testing.assert_array_equal(a.completion, b.completion)
+    np.testing.assert_array_equal(a.link_loads, b.link_loads)
+
+
+# ---------------------------------------------------------------------------
+# route_pattern dispatch.
+# ---------------------------------------------------------------------------
+def test_route_pattern_torus_bit_for_bit_every_spelling():
+    dims = (4, 4, 2)
+    rng = np.random.default_rng(3)
+    fab = TorusFabric.bgq(dims)
+    src, dst, vol = _random_traffic(fab, rng)
+    want = route_dor(dims, src, dst, vol)
+    for spelling in (fab, Torus(dims), dims):
+        got = route_pattern(spelling, src, dst, vol)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_route_pattern_rejects_foreign_modes():
+    src = np.array([[0, 0]])
+    dst = np.array([[1, 1]])
+    with pytest.raises(ValueError, match="mode='dor' only"):
+        route_pattern(TorusFabric.bgq((4, 4)), src, dst, 1.0, mode="dal")
+    with pytest.raises(ValueError, match="numpy-only"):
+        route_pattern(HyperXFabric((4, 4)), src, dst, 1.0, backend="xla")
+
+
+def test_route_pattern_hyperx_returns_flat_loads():
+    hx = HyperXFabric((4, 4))
+    loads = route_pattern(hx, np.array([[0, 0]]), np.array([[2, 3]]), 1.0)
+    assert loads.shape == (hx.links().n_slots,)
+    assert float(loads.sum()) == 2.0  # Hamming distance 2, one unit each hop
+
+
+# ---------------------------------------------------------------------------
+# Slice planning stays ring-only (regression for the clear TypeError).
+# ---------------------------------------------------------------------------
+def test_slice_planners_reject_hyperx_with_clear_type_error():
+    hx = HyperXFabric((4, 4))
+    with pytest.raises(TypeError, match="ring"):
+        slice_fabric(hx, (2, 2))
+    with pytest.raises(TypeError, match="ring"):
+        ranked_slice_geometries(hx, 4)
+    with pytest.raises(TypeError, match="ring"):
+        worst_slice_geometry(hx, 4)

@@ -36,6 +36,7 @@ REPO = Path(__file__).resolve().parents[1]
 AUDITED_MODULES = [
     "repro.network.geometry",
     "repro.network.fabric",
+    "repro.network.hamming",
     "repro.network.isoperimetry",
     "repro.network.routing",
     "repro.network.patterns",
